@@ -1,0 +1,69 @@
+"""Roofline report generator: reads dry-run JSON rows (launch/dryrun.py
+--out) and renders the EXPERIMENTS.md §Roofline table with the three terms,
+bottleneck, useful-FLOP ratio, and per-cell one-line recommendation."""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def recommendation(row) -> str:
+    b = row["bottleneck"]
+    if b == "collective":
+        return ("shrink collective bytes: overlap grad all-reduce with "
+                "microbatch compute, int8-compress the DCN hop, or move "
+                "batch axes")
+    if b == "memory":
+        return ("cut HBM traffic: fuse attention (flash kernel), raise "
+                "arithmetic intensity with larger per-chip batch, revisit "
+                "remat policy")
+    return "compute-bound — at the roofline; only kernel-level wins remain"
+
+
+def render_table(rows, fmt="md"):
+    cols = ["arch", "shape", "mesh", "chips", "t_compute_s", "t_memory_s",
+            "t_collective_s", "bottleneck", "useful_flop_ratio",
+            "roofline_fraction"]
+    if fmt == "md":
+        head = ("| " + " | ".join(cols) + " |\n" +
+                "|" + "---|" * len(cols))
+        lines = [head]
+        for r in rows:
+            vals = []
+            for c in cols:
+                v = r[c]
+                vals.append(f"{v:.2e}" if isinstance(v, float) and c.startswith("t_")
+                            else (f"{v:.3f}" if isinstance(v, float) else str(v)))
+            lines.append("| " + " | ".join(vals) + " |")
+        return "\n".join(lines)
+    # csv
+    out = [",".join(cols)]
+    for r in rows:
+        out.append(",".join(str(r[c]) for c in cols))
+    return "\n".join(out)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("results", nargs="+", help="dry-run JSON files")
+    ap.add_argument("--fmt", default="md", choices=["md", "csv"])
+    args = ap.parse_args(argv)
+    rows = []
+    for path in args.results:
+        with open(path) as f:
+            data = json.load(f)
+        rows.extend(data["rows"])
+        for fail in data.get("failures", []):
+            print(f"FAILURE: {fail}", file=sys.stderr)
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    print(render_table(rows, args.fmt))
+    print()
+    for r in rows:
+        print(f"- {r['arch']} × {r['shape']} [{r['mesh']}]: "
+              f"{r['bottleneck']}-bound → {recommendation(r)}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,4 @@
+from repro.ckpt.checkpoint import (CheckpointManager, restore, save,
+                                   latest_step)
+
+__all__ = ["CheckpointManager", "restore", "save", "latest_step"]

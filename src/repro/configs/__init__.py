@@ -1,0 +1,4 @@
+"""Architecture config registry."""
+from repro.configs.base import (ArchConfig, MLAConfig, MoEConfig, SSMConfig,
+                                ShapeConfig, SHAPES, get_arch, list_archs, cells)
+from repro.configs.all import ALL_ARCHS  # noqa: F401 (registers everything)

@@ -1,0 +1,4 @@
+"""Config for arctic-480b (see repro.configs.all for the single source of truth)."""
+from repro.configs.all import ARCTIC_480B
+
+CONFIG = ARCTIC_480B

@@ -1,0 +1,4 @@
+"""Config for hymba-1.5b (see repro.configs.all for the single source of truth)."""
+from repro.configs.all import HYMBA_1_5B
+
+CONFIG = HYMBA_1_5B

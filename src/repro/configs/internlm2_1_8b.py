@@ -1,0 +1,4 @@
+"""Config for internlm2-1.8b (see repro.configs.all for the single source of truth)."""
+from repro.configs.all import INTERNLM2_1_8B
+
+CONFIG = INTERNLM2_1_8B

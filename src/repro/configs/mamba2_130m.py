@@ -1,0 +1,4 @@
+"""Config for mamba2-130m (see repro.configs.all for the single source of truth)."""
+from repro.configs.all import MAMBA2_130M
+
+CONFIG = MAMBA2_130M

@@ -1,0 +1,4 @@
+"""Config for minicpm3-4b (see repro.configs.all for the single source of truth)."""
+from repro.configs.all import MINICPM3_4B
+
+CONFIG = MINICPM3_4B

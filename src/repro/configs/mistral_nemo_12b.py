@@ -1,0 +1,4 @@
+"""Config for mistral-nemo-12b (see repro.configs.all for the single source of truth)."""
+from repro.configs.all import MISTRAL_NEMO_12B
+
+CONFIG = MISTRAL_NEMO_12B

@@ -1,0 +1,4 @@
+"""Config for musicgen-medium (see repro.configs.all for the single source of truth)."""
+from repro.configs.all import MUSICGEN_MEDIUM
+
+CONFIG = MUSICGEN_MEDIUM

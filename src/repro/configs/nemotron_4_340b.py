@@ -1,0 +1,4 @@
+"""Config for nemotron-4-340b (see repro.configs.all for the single source of truth)."""
+from repro.configs.all import NEMOTRON_4_340B
+
+CONFIG = NEMOTRON_4_340B

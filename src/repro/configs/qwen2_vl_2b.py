@@ -1,0 +1,4 @@
+"""Config for qwen2-vl-2b (see repro.configs.all for the single source of truth)."""
+from repro.configs.all import QWEN2_VL_2B
+
+CONFIG = QWEN2_VL_2B

@@ -1,0 +1,4 @@
+"""Config for qwen3-moe-235b-a22b (see repro.configs.all for the single source of truth)."""
+from repro.configs.all import QWEN3_MOE_235B
+
+CONFIG = QWEN3_MOE_235B

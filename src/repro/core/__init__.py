@@ -1,0 +1,36 @@
+"""Pilot-Edge core: the paper's contribution as a composable JAX-hosted
+framework layer.
+
+Public API (Listing 1 & 2 of the paper):
+
+* :class:`PilotManager` / :class:`ComputeResource` / :class:`Pilot` —
+  resource acquisition (step 1),
+* :class:`EdgeToCloudPipeline` — FaaS application instantiation (step 2),
+* :class:`Broker` / :class:`WanShaper` — pilot-managed brokering,
+* :class:`ParameterService` — cross-continuum model sharing,
+* :class:`PlacementEngine` / :class:`TaskProfile` — placement trade-offs,
+* :class:`MetricsRegistry` — linked cross-component monitoring (step 3),
+* :class:`TaskRuntime` — per-pilot execution with retries/stragglers,
+* :class:`AutoScaler` / :func:`remesh_restart` — dynamism + fault tolerance.
+"""
+from repro.core.broker import Broker, ConsumerGroup, Message, Topic, WanShaper
+from repro.core.elastic import AutoScaler, ScalePolicy, remesh_restart
+from repro.core.faas import EdgeToCloudPipeline, PipelineResult
+from repro.core.monitoring import MetricsRegistry
+from repro.core.params_service import ParameterService
+from repro.core.pilot import (ComputeResource, Pilot, PilotError,
+                              PilotManager, register_backend)
+from repro.core.placement import (LinkModel, PlacementDecision,
+                                  PlacementEngine, TaskProfile)
+from repro.core.runtime import TaskContext, TaskFailed, TaskFuture, TaskRuntime
+
+__all__ = [
+    "Broker", "ConsumerGroup", "Message", "Topic", "WanShaper",
+    "AutoScaler", "ScalePolicy", "remesh_restart",
+    "EdgeToCloudPipeline", "PipelineResult",
+    "MetricsRegistry", "ParameterService",
+    "ComputeResource", "Pilot", "PilotError", "PilotManager",
+    "register_backend",
+    "LinkModel", "PlacementDecision", "PlacementEngine", "TaskProfile",
+    "TaskContext", "TaskFailed", "TaskFuture", "TaskRuntime",
+]

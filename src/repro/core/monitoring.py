@@ -1,0 +1,147 @@
+"""Cross-component monitoring (paper §II-B step 3, §III.1).
+
+The paper: "The framework captures and links comprehensive metrics across all
+involved components, particularly the edge data generator, broker, and cloud
+processing services ... This data allows the easy identification of
+bottlenecks."
+
+We reproduce that with a process-wide :class:`MetricsRegistry`. Every message
+carries a unique ``msg_id``; each component stamps events
+(``produced`` / ``broker_in`` / ``broker_out`` / ``consumed`` /
+``processed``) against that id, so end-to-end latency decomposes into
+per-hop latencies exactly like the paper's linked metrics. Counters and
+gauges cover throughput and resource accounting (bytes through the broker,
+task retries, straggler re-executions).
+
+Thread-safe: producers/consumers/runtimes stamp from their own threads.
+"""
+from __future__ import annotations
+
+import statistics
+import threading
+import time
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+
+@dataclass
+class MessageTrace:
+    """Linked per-message timestamps across components (seconds)."""
+    msg_id: str
+    stamps: Dict[str, float] = field(default_factory=dict)
+    meta: Dict[str, float] = field(default_factory=dict)
+
+    def span(self, start: str, end: str) -> Optional[float]:
+        if start in self.stamps and end in self.stamps:
+            return self.stamps[end] - self.stamps[start]
+        return None
+
+
+# canonical event names, in pipeline order
+EVENTS = ("produced", "broker_in", "broker_out", "consumed", "processed")
+
+
+class MetricsRegistry:
+    """Process-wide registry: message traces + counters + gauges.
+
+    One registry per pipeline run; injected into broker/runtime/pipeline so
+    all components stamp into the same store (the paper's "unique job
+    identifier ensures that progress and errors can be consistently
+    tracked").
+    """
+
+    def __init__(self, clock=time.monotonic):
+        self._clock = clock
+        self._lock = threading.Lock()
+        self._traces: Dict[str, MessageTrace] = {}
+        self._counters: Dict[str, float] = defaultdict(float)
+        self._events: List[dict] = []
+
+    # -- message lifecycle ---------------------------------------------------
+
+    def stamp(self, msg_id: str, event: str, **meta) -> float:
+        t = self._clock()
+        with self._lock:
+            tr = self._traces.setdefault(msg_id, MessageTrace(msg_id))
+            tr.stamps[event] = t
+            tr.meta.update(meta)
+        return t
+
+    def trace(self, msg_id: str) -> Optional[MessageTrace]:
+        with self._lock:
+            return self._traces.get(msg_id)
+
+    # -- counters / events ----------------------------------------------------
+
+    def incr(self, name: str, value: float = 1.0) -> None:
+        with self._lock:
+            self._counters[name] += value
+
+    def counter(self, name: str) -> float:
+        with self._lock:
+            return self._counters.get(name, 0.0)
+
+    def event(self, kind: str, **data) -> None:
+        with self._lock:
+            self._events.append({"kind": kind, "t": self._clock(), **data})
+
+    def events(self, kind: Optional[str] = None) -> List[dict]:
+        with self._lock:
+            if kind is None:
+                return list(self._events)
+            return [e for e in self._events if e["kind"] == kind]
+
+    # -- aggregation (the paper's Fig 2/3 metrics) ----------------------------
+
+    def latencies(self, start: str = "produced",
+                  end: str = "processed") -> List[float]:
+        with self._lock:
+            out = []
+            for tr in self._traces.values():
+                s = tr.span(start, end)
+                if s is not None:
+                    out.append(s)
+            return out
+
+    def summary(self, start: str = "produced",
+                end: str = "processed") -> Dict[str, float]:
+        lat = self.latencies(start, end)
+        if not lat:
+            return {"count": 0}
+        lat.sort()
+        n = len(lat)
+        return {
+            "count": n,
+            "mean_s": statistics.fmean(lat),
+            "p50_s": lat[n // 2],
+            "p95_s": lat[min(n - 1, int(0.95 * n))],
+            "max_s": lat[-1],
+        }
+
+    def throughput(self, event: str = "processed") -> Dict[str, float]:
+        """Messages/s and bytes/s over the observed window of ``event``."""
+        with self._lock:
+            ts = [tr.stamps[event] for tr in self._traces.values()
+                  if event in tr.stamps]
+            nbytes = sum(tr.meta.get("bytes", 0.0)
+                         for tr in self._traces.values()
+                         if event in tr.stamps)
+        if len(ts) < 2:
+            return {"msgs_per_s": 0.0, "bytes_per_s": 0.0, "count": len(ts)}
+        dt = max(max(ts) - min(ts), 1e-9)
+        return {"msgs_per_s": len(ts) / dt, "bytes_per_s": nbytes / dt,
+                "count": len(ts)}
+
+    def per_hop_latency(self) -> Dict[str, Dict[str, float]]:
+        """Decomposed latency between consecutive pipeline events — the
+        paper's bottleneck-identification view (e.g. broker faster than the
+        consuming processing tasks)."""
+        out = {}
+        for a, b in zip(EVENTS[:-1], EVENTS[1:]):
+            lat = self.latencies(a, b)
+            if lat:
+                out[f"{a}->{b}"] = {
+                    "mean_s": statistics.fmean(lat),
+                    "max_s": max(lat), "count": len(lat)}
+        return out

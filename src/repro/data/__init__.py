@@ -1,0 +1,4 @@
+from repro.data.pipeline import (SyntheticLMDataset, TokenBatcher,
+                                 make_batch_iterator)
+
+__all__ = ["SyntheticLMDataset", "TokenBatcher", "make_batch_iterator"]

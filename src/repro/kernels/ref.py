@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``assert_allclose``
+targets for the per-kernel shape/dtype sweeps in tests/test_kernels.py)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window=None):
+    """O(S²) softmax attention. q (B,Sq,H,D); k/v (B,Sk,Hkv,D); GQA via
+    kv-head broadcast. float32 softmax accumulation."""
+    b, sq, h, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    rep = h // hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(d))
+    qpos = jnp.arange(sq)
+    kpos = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask = kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask = mask & (kpos[None, :] > qpos[:, None] - window)
+    scores = jnp.where(mask[None, None], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)           # fully-masked rows
+    out = jnp.einsum("bhqk,bkhd->bqhd", p.astype(jnp.float32),
+                     v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def kmeans_assign_ref(points, centroids):
+    """points (N,F), centroids (K,F) -> (ids (N,), min-dist (N,)).
+    Distances via the MXU-friendly expansion ||x||²−2x·cᵀ+||c||²."""
+    x2 = jnp.sum(points.astype(jnp.float32) ** 2, axis=1, keepdims=True)
+    c2 = jnp.sum(centroids.astype(jnp.float32) ** 2, axis=1)
+    xc = points.astype(jnp.float32) @ centroids.astype(jnp.float32).T
+    d2 = jnp.maximum(x2 - 2.0 * xc + c2[None, :], 0.0)
+    ids = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    dmin = jnp.sqrt(jnp.take_along_axis(d2, ids[:, None].astype(jnp.int64)
+                                        if False else ids[:, None], 1)[:, 0])
+    return ids, dmin
+
+
+def ssd_ref(xh, dt, A, B_, C_, D):
+    """Sequential (exact) SSD recurrence — the slow oracle.
+
+    xh (B,S,nh,hd); dt (B,S,nh) post-softplus; A (nh,) negative;
+    B_/C_ (B,S,g,ds); D (nh,). Returns y (B,S,nh,hd), final_state
+    (B,nh,hd,ds).
+    """
+    b, s, nh, hd = xh.shape
+    g, ds = B_.shape[2], B_.shape[3]
+    rep = nh // g
+    BH = jnp.repeat(B_, rep, axis=2).astype(jnp.float32)   # (B,S,nh,ds)
+    CH = jnp.repeat(C_, rep, axis=2).astype(jnp.float32)
+    xf = xh.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+
+    def step(state, t):
+        x_t, dt_t, b_t, c_t = t
+        dA = jnp.exp(dt_t * A[None, :])                    # (B,nh)
+        upd = jnp.einsum("bh,bhp,bhn->bhpn", dt_t, x_t, b_t)
+        state = dA[:, :, None, None] * state + upd
+        y_t = jnp.einsum("bhpn,bhn->bhp", state, c_t)
+        return state, y_t
+
+    init = jnp.zeros((b, nh, hd, ds), jnp.float32)
+    xs = (xf.transpose(1, 0, 2, 3), dtf.transpose(1, 0, 2),
+          BH.transpose(1, 0, 2, 3), CH.transpose(1, 0, 2, 3))
+    final, ys = jax.lax.scan(step, init, xs)
+    y = ys.transpose(1, 0, 2, 3)
+    y = y + xf * D[None, None, :, None]
+    return y.astype(xh.dtype), final

@@ -1,0 +1,77 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input.
+
+Weak-type-correct, shardable, zero device allocation — the dry-run lowers
+against these. Modality frontends are stubs per the assignment: qwen2-vl gets
+precomputed patch embeddings + M-RoPE position ids; musicgen gets EnCodec
+codebook ids.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import transformer as T
+
+SDS = jax.ShapeDtypeStruct
+
+
+def train_input_specs(cfg: ArchConfig, shape: ShapeConfig,
+                      dtype=jnp.bfloat16):
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.input_mode == "embeddings":
+        return {"embeds": SDS((b, s, cfg.d_model), dtype),
+                "positions": SDS((3, b, s), jnp.int32),
+                "labels": SDS((b, s), jnp.int32)}
+    if cfg.n_codebooks > 1:
+        return {"tokens": SDS((b, s, cfg.n_codebooks), jnp.int32),
+                "labels": SDS((b, s, cfg.n_codebooks), jnp.int32)}
+    return {"tokens": SDS((b, s), jnp.int32),
+            "labels": SDS((b, s), jnp.int32)}
+
+
+def prefill_input_specs(cfg: ArchConfig, shape: ShapeConfig,
+                        dtype=jnp.bfloat16):
+    spec = train_input_specs(cfg, shape, dtype)
+    spec.pop("labels")
+    return spec
+
+
+def decode_input_specs(cfg: ArchConfig, shape: ShapeConfig,
+                       dtype=jnp.bfloat16):
+    """serve_step inputs: one new token + a KV/SSM cache of seq_len."""
+    b, s = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(
+        lambda: T.init_cache(cfg, b, s, dtype))
+    if cfg.input_mode == "embeddings":
+        inp = {"embeds": SDS((b, 1, cfg.d_model), dtype),
+               "positions": SDS((3, b, 1), jnp.int32)}
+    elif cfg.n_codebooks > 1:
+        inp = {"tokens": SDS((b, 1, cfg.n_codebooks), jnp.int32)}
+    else:
+        inp = {"tokens": SDS((b, 1), jnp.int32)}
+    inp["length"] = SDS((), jnp.int32)
+    return inp, cache
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, dtype=jnp.bfloat16):
+    """Dispatch by shape kind. Returns (inputs,) or (inputs, cache)."""
+    if shape.kind == "train":
+        return (train_input_specs(cfg, shape, dtype),)
+    if shape.kind == "prefill":
+        return (prefill_input_specs(cfg, shape, dtype),)
+    if shape.kind == "decode":
+        return decode_input_specs(cfg, shape, dtype)
+    raise ValueError(shape.kind)
+
+
+def input_pspecs(cfg: ArchConfig, rules):
+    """PartitionSpecs matching train/prefill input structure."""
+    from jax.sharding import PartitionSpec as P
+    b = rules.batch
+    if cfg.input_mode == "embeddings":
+        return {"embeds": P(b, None, None), "positions": P(None, b, None),
+                "labels": P(b, None)}
+    if cfg.n_codebooks > 1:
+        return {"tokens": P(b, None, None), "labels": P(b, None, None)}
+    return {"tokens": P(b, None), "labels": P(b, None)}

@@ -1,0 +1,10 @@
+"""Paper ML workloads (§III.2) in pure JAX: k-means, isolation forest,
+auto-encoder — the three outlier-detection models Pilot-Edge characterizes —
+plus the Mini-App synthetic data generator [11]."""
+from repro.ml.autoencoder import AutoEncoder
+from repro.ml.datagen import MiniAppGenerator, message_nbytes
+from repro.ml.isoforest import IsolationForest
+from repro.ml.kmeans import KMeans
+
+__all__ = ["AutoEncoder", "IsolationForest", "KMeans", "MiniAppGenerator",
+           "message_nbytes"]

@@ -1,0 +1,152 @@
+"""Auto-encoder outlier detector — the paper's heaviest workload (§III.2).
+
+"We use the Keras-based auto-encoder implementation of PyOD with four hidden
+layers with a size of [64, 32, 32, 64], and thus, a total number of 11,552
+parameters."
+
+PyOD's (Keras-era) builder prepends an input-width layer and appends the
+reconstruction layer, so hidden_neurons=[64,32,32,64] over 32 features
+yields dense sizes [32, 64, 32, 32, 64, 32] + output(32):
+
+    32→32 (1,056) + 32→64 (2,112) + 64→32 (2,080) + 32→32 (1,056)
+    + 32→64 (2,112) + 64→32 (2,080) + 32→32 (1,056)  =  11,552  ✓
+
+We reproduce exactly that topology in JAX (ReLU hidden activations, linear
+output, MSE reconstruction loss) with Adam; the outlier score is the
+per-point reconstruction error, as in PyOD.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import make_optimizer
+
+
+def _layer_sizes(n_features: int, hidden: Tuple[int, ...]):
+    """PyOD topology (see module doc): input F, dense widths
+    [F, *hidden, F], then the reconstruction output F — seven dense layers
+    for hidden=(64,32,32,64), 11,552 params at F=32."""
+    return [n_features, n_features, *hidden, n_features, n_features]
+    # sizes[0] is the input width; the rest are layer output widths.
+
+
+def ae_init(key, n_features: int = 32,
+            hidden: Tuple[int, ...] = (64, 32, 32, 64)):
+    sizes = _layer_sizes(n_features, hidden)
+    params = []
+    keys = jax.random.split(key, len(sizes) - 1)
+    for k, din, dout in zip(keys, sizes[:-1], sizes[1:]):
+        w = jax.random.normal(k, (din, dout)) * jnp.sqrt(2.0 / din)
+        params.append({"w": w.astype(jnp.float32),
+                       "b": jnp.zeros((dout,), jnp.float32)})
+    return params
+
+
+def ae_param_count(params) -> int:
+    return sum(int(np.prod(p["w"].shape)) + int(p["b"].shape[0])
+               for p in params)
+
+
+@jax.jit
+def ae_forward(params, x):
+    h = x
+    for i, p in enumerate(params):
+        h = h @ p["w"] + p["b"]
+        if i < len(params) - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+@jax.jit
+def ae_recon_error(params, x):
+    """Per-point L2 reconstruction error — the PyOD outlier score."""
+    r = ae_forward(params, x)
+    return jnp.sqrt(jnp.sum((r - x) ** 2, axis=-1))
+
+
+@jax.jit
+def ae_loss(params, x):
+    r = ae_forward(params, x)
+    return jnp.mean((r - x) ** 2)
+
+
+@dataclass
+class AutoEncoder:
+    n_features: int = 32
+    hidden: Tuple[int, ...] = (64, 32, 32, 64)
+    lr: float = 1e-3
+    epochs_per_batch: int = 1
+    seed: int = 0
+
+    def __post_init__(self):
+        self._opt = make_optimizer("adamw", lambda s: self.lr,
+                                   weight_decay=0.0)
+        self._step = jax.jit(self._make_step())
+
+    def _make_step(self):
+        opt = self._opt
+
+        def step(params, opt_state, stepno, x):
+            grads = jax.grad(ae_loss)(params, x)
+            updates, new_opt = opt.update(grads, opt_state, params, stepno)
+            new_params = jax.tree.map(lambda p, u: p + u, params, updates)
+            return new_params, new_opt, ae_loss(new_params, x)
+        return step
+
+    def init(self):
+        params = ae_init(jax.random.key(self.seed), self.n_features,
+                         self.hidden)
+        return {"params": params, "opt": self._opt.init(params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(self, state, points):
+        x = self._norm(points)
+        params, opt, stepno = state["params"], state["opt"], state["step"]
+        loss = None
+        for _ in range(self.epochs_per_batch):
+            params, opt, loss = self._step(params, opt, stepno, x)
+            stepno = stepno + 1
+        return {"params": params, "opt": opt, "step": stepno}, float(loss)
+
+    def outlier_scores(self, state, points):
+        return ae_recon_error(state["params"], self._norm(points))
+
+    @staticmethod
+    def _norm(points):
+        x = jnp.asarray(points, jnp.float32)
+        mu = x.mean(0, keepdims=True)
+        sd = x.std(0, keepdims=True) + 1e-6
+        return (x - mu) / sd
+
+    def make_processor(self, param_service=None, model_name: str = "ae",
+                       train: bool = True):
+        holder = {"state": None, "version": 0}
+
+        def process_cloud(context, data=None):
+            pts = np.asarray(data, np.float64)
+            if holder["state"] is None:
+                if (param_service is not None
+                        and model_name in param_service.names()):
+                    v, tree = param_service.fetch(model_name)
+                    holder["state"] = jax.tree.map(jnp.asarray, tree)
+                    holder["version"] = v
+                else:
+                    holder["state"] = self.init()
+            scores = self.outlier_scores(holder["state"], pts)
+            if train:
+                holder["state"], loss = self.update(holder["state"], pts)
+                if param_service is not None:
+                    holder["version"] = param_service.publish(
+                        model_name, holder["state"])
+            s = np.asarray(scores)
+            thresh = s.mean() + 3.0 * s.std()
+            return {"n_outliers": int((s > thresh).sum()),
+                    "mean_score": float(s.mean())}
+
+        return process_cloud

@@ -1,0 +1,131 @@
+"""Streaming (mini-batch) k-means in JAX — the paper's lightest workload
+(25 clusters, §III.2).
+
+The paper's pattern: "the model is updated based on the incoming data; model
+updates are managed via the parameter service". We implement exactly that:
+
+* ``assign(points)`` — nearest-centroid ids + distances (inference /
+  outlier score). The assignment hot loop has a Pallas TPU kernel
+  (kernels/kmeans.py) selected with ``impl='pallas'``; the default jnp path
+  is numerically identical (kernels/ref.py *is* this math).
+* ``update(points)`` — one mini-batch k-means step (Sculley 2010): per-seen-
+  count learning rates, so repeated messages converge like the paper's
+  streaming updates.
+* ``outlier_scores(points)`` — distance to the assigned centroid; thresholded
+  at ``mean + 3·std`` of running distances.
+
+State is a plain pytree ``{"centroids", "counts"}`` so it round-trips the
+ParameterService and checkpoints unchanged.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@partial(jax.jit, static_argnames=("impl",))
+def _assign(centroids, points, impl: str = "jnp"):
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        return kops.kmeans_assign(points, centroids)
+    # ||x-c||^2 = ||x||^2 - 2 x.c + ||c||^2 (MXU-matmul form)
+    x2 = jnp.sum(points * points, axis=1, keepdims=True)
+    c2 = jnp.sum(centroids * centroids, axis=1)
+    d2 = x2 - 2.0 * points @ centroids.T + c2[None, :]
+    d2 = jnp.maximum(d2, 0.0)
+    ids = jnp.argmin(d2, axis=1)
+    dmin = jnp.sqrt(jnp.take_along_axis(d2, ids[:, None], axis=1)[:, 0])
+    return ids, dmin
+
+
+@jax.jit
+def _update(centroids, counts, points):
+    """Mini-batch k-means step (per-count learning rate)."""
+    ids, _ = _assign(centroids, points)
+    k = centroids.shape[0]
+    onehot = jax.nn.one_hot(ids, k, dtype=points.dtype)          # (N,K)
+    batch_counts = onehot.sum(0)                                  # (K,)
+    sums = onehot.T @ points                                      # (K,F)
+    new_counts = counts + batch_counts
+    lr = jnp.where(batch_counts > 0, batch_counts /
+                   jnp.maximum(new_counts, 1.0), 0.0)[:, None]
+    means = sums / jnp.maximum(batch_counts, 1.0)[:, None]
+    new_centroids = centroids * (1.0 - lr) + means * lr
+    return new_centroids, new_counts
+
+
+@dataclass
+class KMeans:
+    n_clusters: int = 25
+    n_features: int = 32
+    seed: int = 0
+    impl: str = "jnp"               # jnp | pallas
+
+    def init(self, sample: Optional[np.ndarray] = None):
+        if sample is not None and len(sample) >= self.n_clusters:
+            idx = np.random.default_rng(self.seed).choice(
+                len(sample), self.n_clusters, replace=False)
+            cent = jnp.asarray(sample[idx], jnp.float32)
+        else:
+            cent = jax.random.normal(
+                jax.random.key(self.seed),
+                (self.n_clusters, self.n_features)) * 5.0
+        return {"centroids": cent,
+                "counts": jnp.zeros((self.n_clusters,), jnp.float32)}
+
+    def assign(self, state, points) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        pts = jnp.asarray(points, jnp.float32)
+        return _assign(state["centroids"], pts, impl=self.impl)
+
+    def update(self, state, points):
+        pts = jnp.asarray(points, jnp.float32)
+        cent, counts = _update(state["centroids"], state["counts"], pts)
+        return {"centroids": cent, "counts": counts}
+
+    def outlier_scores(self, state, points) -> jnp.ndarray:
+        _, d = self.assign(state, points)
+        return d
+
+    def inertia(self, state, points) -> float:
+        _, d = self.assign(state, points)
+        return float(jnp.sum(d * d))
+
+    def make_processor(self, param_service=None, model_name: str = "kmeans",
+                       train: bool = True):
+        """FaaS ``process_cloud`` handler: score + (optionally) update +
+        publish to the parameter service — the paper's model-update loop."""
+        holder = {"state": None, "version": 0}
+
+        def process_cloud(context, data=None):
+            pts = np.asarray(data, np.float64)
+            if holder["state"] is None:
+                if param_service is not None and model_name in \
+                        param_service.names():
+                    v, tree = param_service.fetch(model_name)
+                    holder["state"] = jax.tree.map(jnp.asarray, tree)
+                    holder["version"] = v
+                else:
+                    holder["state"] = self.init(pts)
+            elif param_service is not None:
+                newer = param_service.fetch_if_newer(
+                    model_name, holder["version"])
+                if newer is not None:
+                    holder["version"] = newer[0]
+                    holder["state"] = jax.tree.map(jnp.asarray, newer[1])
+            scores = self.outlier_scores(holder["state"], pts)
+            if train:
+                holder["state"] = self.update(holder["state"], pts)
+                if param_service is not None:
+                    holder["version"] = param_service.publish(
+                        model_name, holder["state"])
+            s = np.asarray(scores)
+            thresh = s.mean() + 3.0 * s.std()
+            return {"n_outliers": int((s > thresh).sum()),
+                    "mean_score": float(s.mean())}
+
+        return process_cloud

@@ -1,0 +1,5 @@
+from repro.models import layers, transformer
+from repro.models.transformer import (ShardRules, decode_step, forward,
+                                      init_cache, init_params, loss_fn,
+                                      param_pspecs, param_shapes,
+                                      cache_pspecs)

@@ -1,0 +1,484 @@
+"""Unified decoder model covering all ten assigned architectures.
+
+One parameterized decoder:
+
+* layer stack via ``lax.scan`` over stacked per-layer params (keeps the HLO —
+  and therefore compile time of the 340B/480B configs — small and makes the
+  remat policy uniform),
+* family-specific mixers picked by ``cfg.attn_kind`` (gqa / mla / hybrid /
+  none→SSD),
+* FFN / MoE picked by ``cfg.moe`` / ``cfg.ffn_kind``,
+* modality stubs: musicgen consumes (B,S,4) codebook ids, qwen2-vl consumes
+  precomputed patch embeddings + (3,B,S) M-RoPE position ids.
+
+Params are plain dict pytrees; ``param_pspecs`` mirrors the structure with
+``PartitionSpec`` leaves (TP on ``model``, optional ZeRO-3/FSDP dim on
+``data``), so the same model runs on 1 CPU device (smoke tests) or a
+512-chip multi-pod mesh (dry-run) without code changes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+
+
+# ---------------------------------------------------------------------------
+# sharding rules
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardRules:
+    """Maps logical dims to mesh axes. ``None`` fields replicate."""
+    batch: tuple = ("data",)          # ("pod","data") on the multi-pod mesh
+    model: Optional[str] = "model"
+    fsdp: Optional[str] = None        # ZeRO-3 axis for params (usually "data")
+    seq: Optional[str] = None         # sequence-parallel axis for activations
+    moe_groups: int = 1               # local dispatch groups (= batch shards)
+    model_size: int = 1               # mesh size of the model axis
+
+    def act(self, x, *spec):
+        """Sharding constraint helper; no-op when rules are disabled."""
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+NO_RULES = None
+
+
+def _c(rules, x, *spec):
+    if rules is None:
+        return x
+    return rules.act(x, *spec)
+
+
+def _expert_constraint(rules):
+    """MoE buffer constraint: (E,C,D) -> model on E; grouped (G,E,C,D) ->
+    batch axes on G, model on E (group-local dispatch)."""
+    def f(e):
+        if e.ndim == 4:
+            return _c(rules, e, rules.batch, rules.model, None, None)
+        return _c(rules, e, rules.model, None, None)
+    return f
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------
+
+
+def _block_init(key, cfg: ArchConfig, dtype):
+    ks = jax.random.split(key, 4)
+    p = {"ln1": jnp.ones((cfg.d_model,), dtype)}
+    if cfg.attn_kind == "gqa":
+        p["attn"] = L.gqa_init(ks[0], cfg, dtype)
+    elif cfg.attn_kind == "mla":
+        p["attn"] = L.mla_init(ks[0], cfg, dtype)
+    elif cfg.attn_kind == "hybrid":
+        p["mixer"] = L.hybrid_init(ks[0], cfg, dtype)
+    elif cfg.attn_kind == "none":
+        p["ssm"] = L.ssm_init(ks[0], cfg, dtype)
+    else:
+        raise ValueError(cfg.attn_kind)
+    if cfg.moe is not None:
+        p["ln2"] = jnp.ones((cfg.d_model,), dtype)
+        p["moe"] = L.moe_init(ks[1], cfg, dtype)
+    elif cfg.d_ff:
+        p["ln2"] = jnp.ones((cfg.d_model,), dtype)
+        p["ffn"] = L.ffn_init(ks[2], cfg, dtype)
+    return p
+
+
+def init_params(key, cfg: ArchConfig, dtype=jnp.float32):
+    k_emb, k_blocks, k_head = jax.random.split(key, 3)
+    params = {}
+    v, d, kb = cfg.padded_vocab_size, cfg.d_model, cfg.n_codebooks
+    if cfg.input_mode == "tokens":
+        shape = (v, d) if kb == 1 else (kb, v, d)
+        emb = L._init(k_emb, shape, 0.02, dtype)
+        if v != cfg.vocab_size:        # zero the pad rows (never indexed)
+            emb = emb.at[..., cfg.vocab_size:, :].set(0.0)
+        params["embed"] = emb
+    params["ln_f"] = jnp.ones((d,), dtype)
+    if not cfg.tie_embeddings:
+        shape = (d, v) if kb == 1 else (kb, d, v)
+        head = L._init(k_head, shape, 0.02, dtype)
+        if v != cfg.vocab_size:        # zero pad cols -> pad logits == 0
+            head = head.at[..., cfg.vocab_size:].set(0.0)
+        params["head"] = head
+    layer_keys = jax.random.split(k_blocks, cfg.n_layers)
+    params["blocks"] = jax.vmap(
+        lambda k: _block_init(k, cfg, dtype))(layer_keys)
+    return params
+
+
+def param_shapes(cfg: ArchConfig, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct pytree — lets the dry-run lower without allocating."""
+    return jax.eval_shape(
+        lambda k: init_params(k, cfg, dtype), jax.random.key(0))
+
+
+# ---------------------------------------------------------------------------
+# partition specs (mirror init structure exactly)
+# ---------------------------------------------------------------------------
+
+
+def _block_pspecs(cfg: ArchConfig, r: ShardRules):
+    m, f = r.model, r.fsdp
+    rep1 = P(None, None)                       # stacked (L, d) norms
+    p = {"ln1": rep1}
+    if cfg.attn_kind in ("gqa", "hybrid"):
+        # TP shards whole heads. If kv heads don't divide the model axis
+        # (every assigned GQA arch: hkv <= 8 < 16), a column-sharded wk/wv
+        # splits *within* head_dim and every score matmul needs a partial-
+        # sum all-reduce (or the cache a full all-gather at decode).
+        # Megatron-style: replicate the (tiny) kv projections instead and
+        # keep q/o head-sharded — kv compute is redundant but local. Only
+        # worth it without a backward pass (§Perf): dgrad of a replicated
+        # wk/wv costs an activation-sized model-axis all-reduce.
+        kv_rep = (r.model_size > 1
+                  and cfg.n_kv_heads % max(r.model_size, 1) != 0)
+        mkv = None if kv_rep else m
+        attn = {"wq": P(None, f, m), "wk": P(None, f, mkv),
+                "wv": P(None, f, mkv), "wo": P(None, m, f)}
+    if cfg.attn_kind == "gqa":
+        p["attn"] = attn
+    elif cfg.attn_kind == "mla":
+        p["attn"] = {
+            "wq_a": P(None, f, None), "q_norm": rep1,
+            "wq_b": P(None, None, m),
+            "wkv_a": P(None, f, None), "kv_norm": rep1,
+            "wkv_b": P(None, None, m),
+            "wo": P(None, m, f),
+        }
+    if cfg.attn_kind in ("none", "hybrid"):
+        # SSM projections pack z/x/B/C/dt into one output dim — that packed
+        # dim is not TP-shardable as-is (6482/3352 ∤ 16), so SSM weights
+        # replicate over 'model' and shard only on the FSDP axis. Splitting
+        # the projection per-segment to enable head-sharded SSM TP is the
+        # §Perf follow-up recorded in EXPERIMENTS.md.
+        ssm = {"in_proj": P(None, f, None),
+               "conv_w": P(None, None, None), "conv_b": P(None, None),
+               "A_log": P(None, None), "D": P(None, None),
+               "dt_bias": P(None, None),
+               "norm": P(None, None), "out_proj": P(None, None, f)}
+        if cfg.attn_kind == "none":
+            p["ssm"] = ssm
+        else:
+            p["mixer"] = {"attn": attn, "ssm": ssm,
+                          "attn_norm": rep1, "ssm_norm_out": rep1}
+    if cfg.moe is not None:
+        p["ln2"] = rep1
+        moe = {"router": P(None, None, None),
+               "w_gate": P(None, m, f, None),
+               "w_up": P(None, m, f, None),
+               "w_down": P(None, m, None, f)}
+        if cfg.moe.dense_residual:
+            moe["dense"] = {"w_up": P(None, f, m), "w_down": P(None, m, f),
+                            **({"w_gate": P(None, f, m)}
+                               if cfg.ffn_kind == "swiglu" else {})}
+        p["moe"] = moe
+    elif cfg.d_ff:
+        p["ln2"] = rep1
+        ffn = {"w_up": P(None, f, m), "w_down": P(None, m, f)}
+        if cfg.ffn_kind == "swiglu":
+            ffn["w_gate"] = P(None, f, m)
+        p["ffn"] = ffn
+    return p
+
+
+def param_pspecs(cfg: ArchConfig, rules: ShardRules):
+    m, f = rules.model, rules.fsdp
+    specs = {"ln_f": P(None), "blocks": _block_pspecs(cfg, rules)}
+    if cfg.input_mode == "tokens":
+        specs["embed"] = (P(m, f) if cfg.n_codebooks == 1
+                          else P(None, m, f))
+    if not cfg.tie_embeddings:
+        specs["head"] = (P(f, m) if cfg.n_codebooks == 1
+                         else P(None, f, m))
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(params, cfg: ArchConfig, inputs):
+    if cfg.input_mode == "embeddings":
+        return inputs["embeds"]
+    tok = inputs["tokens"]
+    if cfg.n_codebooks == 1:
+        return params["embed"][tok]
+    # musicgen: (B,S,K) codebook ids, summed embeddings
+    parts = [params["embed"][k][tok[..., k]]
+             for k in range(cfg.n_codebooks)]
+    return sum(parts)
+
+
+def _logits(params, cfg: ArchConfig, x, rules):
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].T
+        return _c(rules, logits,
+                  (rules.batch if rules else None), None,
+                  (rules.model if rules else None))
+    if cfg.n_codebooks == 1:
+        logits = x @ params["head"]
+        return _c(rules, logits,
+                  (rules.batch if rules else None), None,
+                  (rules.model if rules else None))
+    return jnp.einsum("bsd,kdv->bskv", x, params["head"])
+
+
+def _positions_cos_sin(cfg: ArchConfig, inputs, seq_len, head_dim):
+    if cfg.pos_kind == "none":
+        return None, None
+    if cfg.pos_kind == "mrope":
+        return L.mrope_cos_sin(inputs["positions"], head_dim,
+                               cfg.rope_theta, cfg.mrope_sections)
+    pos = jnp.arange(seq_len)
+    return L.rope_cos_sin(pos, head_dim, cfg.rope_theta)
+
+
+def _rope_dim(cfg: ArchConfig) -> int:
+    return (cfg.mla.qk_rope_dim if cfg.attn_kind == "mla"
+            else cfg.head_dim)
+
+
+def block_forward(lp, x, cos, sin, cfg: ArchConfig, *, impl, chunk, rules):
+    """One decoder block. Returns (x, aux_dict)."""
+    aux = {}
+    h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    if cfg.attn_kind == "gqa":
+        a, _ = L.gqa_forward(lp["attn"], h, cos, sin, cfg, impl=impl,
+                             window=cfg.sliding_window, chunk=chunk)
+        x = x + a
+    elif cfg.attn_kind == "mla":
+        a, _ = L.mla_forward(lp["attn"], h, cos, sin, cfg, impl=impl,
+                             chunk=chunk)
+        x = x + a
+    elif cfg.attn_kind == "hybrid":
+        a, _ = L.hybrid_forward(lp["mixer"], h, cos, sin, cfg, impl=impl,
+                                chunk=chunk)
+        x = x + a
+    else:                                           # pure SSM (mamba2)
+        x = x + L.ssm_forward(lp["ssm"], h, cfg)
+        return x, aux
+    x = _c(rules, x, (rules.batch if rules else None), rules.seq if rules
+           else None, None)
+    if cfg.moe is not None:
+        h2 = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        y, aux = L.moe_forward(
+            lp["moe"], h2, cfg,
+            shard_experts=(_expert_constraint(rules) if rules else None),
+            groups=(rules.moe_groups if rules else 1))
+        x = x + y
+    elif cfg.d_ff:
+        h2 = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + L.ffn_forward(lp["ffn"], h2, cfg.ffn_kind)
+    x = _c(rules, x, (rules.batch if rules else None), rules.seq if rules
+           else None, None)
+    return x, aux
+
+
+def forward(params, cfg: ArchConfig, inputs, *, impl="dense", chunk=1024,
+            rules: Optional[ShardRules] = None, remat: Optional[bool] = None):
+    """Full-sequence forward. Returns (logits, aux)."""
+    remat = cfg.remat if remat is None else remat
+    x = _embed_inputs(params, cfg, inputs)
+    x = _c(rules, x, (rules.batch if rules else None),
+           rules.seq if rules else None, None)
+    seq_len = x.shape[1]
+    cos, sin = _positions_cos_sin(cfg, inputs, seq_len, _rope_dim(cfg))
+
+    def body(carry, lp):
+        h, aux_acc = carry
+        h, aux = block_forward(lp, h, cos, sin, cfg, impl=impl, chunk=chunk,
+                               rules=rules)
+        for k, v in aux.items():
+            aux_acc[k] = aux_acc.get(k, 0.0) + v
+        return (h, aux_acc), None
+
+    aux0 = ({"lb_loss": 0.0, "z_loss": 0.0, "dropped_frac": 0.0}
+            if cfg.moe is not None else {})
+    body_fn = jax.checkpoint(
+        body, policy=jax.checkpoint_policies.nothing_saveable) if remat \
+        else body
+    (x, aux), _ = lax.scan(body_fn, (x, aux0), params["blocks"])
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = _logits(params, cfg, x, rules)
+    if cfg.moe is not None:
+        aux = {k: v / cfg.n_layers if k == "dropped_frac" else v
+               for k, v in aux.items()}
+    return logits, aux
+
+
+def loss_fn(params, cfg: ArchConfig, inputs, *, impl="dense", chunk=1024,
+            rules=None, remat=None):
+    """Next-token cross entropy (+ MoE aux losses). Returns (loss, metrics)."""
+    logits, aux = forward(params, cfg, inputs, impl=impl, chunk=chunk,
+                          rules=rules, remat=remat)
+    labels = inputs["labels"]
+    vp = cfg.padded_vocab_size
+    if vp != cfg.vocab_size:
+        # mask the vocab-padding columns out of the softmax (no gradient
+        # flows into the zero-init pad rows of the head)
+        pad_mask = jnp.arange(vp) >= cfg.vocab_size
+        logits = jnp.where(pad_mask, -1e30, logits.astype(jnp.float32)
+                           ).astype(logits.dtype)
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    if cfg.n_codebooks == 1:
+        oh = jax.nn.one_hot(labels, vp, dtype=logits.dtype)
+        gold = jnp.einsum("...v,...v->...", logits, oh).astype(jnp.float32)
+    else:
+        oh = jax.nn.one_hot(labels, vp, dtype=logits.dtype)
+        gold = jnp.einsum("bskv,bskv->bsk", logits, oh).astype(jnp.float32)
+    ce = (lse - gold).mean()
+    loss = ce
+    metrics = {"ce": ce}
+    if cfg.moe is not None:
+        loss = loss + aux["lb_loss"] + aux["z_loss"]
+        metrics.update({k: jnp.asarray(v) for k, v in aux.items()})
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# decode (single-token serve step)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16):
+    """Per-layer cache pytree, stacked on a leading layer axis.
+
+    Sliding-window archs get a ring buffer of ``window`` entries; MLA caches
+    the compressed latent; SSM archs carry O(1) state.
+    """
+    Lc = cfg.n_layers
+    c = {}
+    if cfg.attn_kind in ("gqa", "hybrid"):
+        size = max_len
+        if cfg.sliding_window is not None:
+            size = min(max_len, cfg.sliding_window)
+        hkv, hd = cfg.n_kv_heads, cfg.head_dim
+        c["k"] = jnp.zeros((Lc, batch, size, hkv, hd), dtype)
+        c["v"] = jnp.zeros((Lc, batch, size, hkv, hd), dtype)
+    if cfg.attn_kind == "mla":
+        m = cfg.mla
+        c["ckv"] = jnp.zeros((Lc, batch, max_len, m.kv_lora_rank), dtype)
+        c["krope"] = jnp.zeros((Lc, batch, max_len, m.qk_rope_dim), dtype)
+    if cfg.attn_kind in ("none", "hybrid"):
+        s = cfg.ssm
+        d_in, nh, conv_dim = L.ssm_dims(cfg)
+        c["ssm"] = jnp.zeros((Lc, batch, nh, s.head_dim, s.d_state),
+                             jnp.float32)
+        c["conv"] = jnp.zeros((Lc, batch, s.d_conv - 1, conv_dim), dtype)
+    return c
+
+
+def cache_pspecs(cfg: ArchConfig, rules: ShardRules):
+    """Decode caches: batch on the batch axes, long (sequence) dim on model —
+    context-parallel decode keeps the 32k/500k caches within per-chip HBM."""
+    b = rules.batch
+    m = rules.model
+    c = {}
+    if cfg.attn_kind in ("gqa", "hybrid"):
+        c["k"] = P(None, b, m, None, None)
+        c["v"] = P(None, b, m, None, None)
+    if cfg.attn_kind == "mla":
+        c["ckv"] = P(None, b, m, None)
+        c["krope"] = P(None, b, m, None)
+    if cfg.attn_kind in ("none", "hybrid"):
+        # nh (24/50) is not divisible by the model axis — SSM decode state
+        # is batch-sharded only (it is O(1) per sequence anyway)
+        c["ssm"] = P(None, b, None, None, None)
+        c["conv"] = P(None, b, None, None)
+    return c
+
+
+def block_decode(lp, x, cache, length, cos, sin, cfg: ArchConfig,
+                 rules: Optional[ShardRules] = None):
+    h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+
+    def _ring(cache_k):
+        """(write_idx, valid_len) for full or ring-buffer caches."""
+        size = cache_k.shape[1]                     # (B, size, hkv, hd)
+        if cfg.sliding_window is not None:
+            return length % size, jnp.minimum(length + 1, size)
+        return length, length + 1
+
+    if cfg.attn_kind == "gqa":
+        widx, valid = _ring(cache["k"])
+        a, ck, cv = L.gqa_decode(lp["attn"], h, cache["k"], cache["v"],
+                                 widx, valid, cos, sin, cfg)
+        x = x + a
+        cache = {"k": ck, "v": cv}
+    elif cfg.attn_kind == "mla":
+        a, ckv, kr = L.mla_decode(lp["attn"], h, cache["ckv"],
+                                  cache["krope"], length, cos, sin, cfg)
+        x = x + a
+        cache = {"ckv": ckv, "krope": kr}
+    elif cfg.attn_kind == "hybrid":
+        widx, valid = _ring(cache["k"])
+        sub = {"k": cache["k"], "v": cache["v"], "ssm": cache["ssm"],
+               "conv": cache["conv"]}
+        a, sub = L.hybrid_decode(lp["mixer"], h, sub, widx, valid, cos, sin,
+                                 cfg)
+        x = x + a
+        cache = sub
+    else:
+        y, st, conv = L.ssm_decode(lp["ssm"], h, cache["ssm"], cache["conv"],
+                                   cfg)
+        x = x + y
+        return x, {"ssm": st, "conv": conv}
+    if cfg.moe is not None:
+        h2 = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        y, _ = L.moe_forward(
+            lp["moe"], h2, cfg,
+            shard_experts=(_expert_constraint(rules) if rules else None),
+            groups=(rules.moe_groups if rules else 1))
+        x = x + y
+    elif cfg.d_ff:
+        h2 = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + L.ffn_forward(lp["ffn"], h2, cfg.ffn_kind)
+    return x, cache
+
+
+def decode_step(params, cfg: ArchConfig, cache, inputs, *,
+                rules: Optional[ShardRules] = None):
+    """One serve step: new token at position ``inputs['length']``.
+
+    inputs: tokens (B,1) or (B,1,K) / embeds (B,1,D); positions (3,B,1) for
+    mrope; length scalar int32. Returns (logits, new_cache).
+    """
+    x = _embed_inputs(params, cfg, inputs)
+    length = inputs["length"]
+    if cfg.pos_kind == "mrope":
+        cos, sin = L.mrope_cos_sin(inputs["positions"], _rope_dim(cfg),
+                                   cfg.rope_theta, cfg.mrope_sections)
+    elif cfg.pos_kind == "rope":
+        cos, sin = L.rope_cos_sin(length[None], _rope_dim(cfg),
+                                  cfg.rope_theta)
+        cos, sin = cos[None], sin[None]             # (1,1,hd/2)
+    else:
+        cos = sin = None
+
+    def body(h, xs):
+        lp, cache_l = xs
+        h, new_cache = block_decode(lp, h, cache_l, length, cos, sin, cfg,
+                                    rules=rules)
+        return h, new_cache
+
+    x, new_cache = lax.scan(body, x, (params["blocks"], cache))
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = _logits(params, cfg, x, rules)
+    return logits, new_cache

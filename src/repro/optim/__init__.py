@@ -1,0 +1,4 @@
+from repro.optim.optimizers import (adafactor, adamw, make_optimizer,
+                                    clip_by_global_norm, cosine_schedule)
+from repro.optim.compression import (int8_compress, int8_decompress,
+                                     compressed_psum)

@@ -1,0 +1,202 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), all in seconds:
+
+    compute    = HLO_FLOPs   / (chips * PEAK_FLOPS)
+    memory     = HLO_bytes   / (chips * HBM_BW)
+    collective = coll_bytes  / (chips * ICI_BW)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``. Collective
+bytes are parsed out of the optimized HLO text: we sum the result-buffer
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, scaling ops that live inside while-loop bodies by the
+loop trip count (scan over layers / microbatches).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+# TPU v5e-class hardware constants (per assignment).
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+# `%name = TYPE[d0,d1]{layout} op-name(` — possibly tuple types
+_OP_RE = re.compile(
+    r"=\s*(?P<type>\(?[a-z0-9]+\[[^\]=]*\]?[^=]*?)\s+"
+    r"(?P<op>" + "|".join(_COLL_OPS) + r")(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> Dict[str, float]:
+    """Sum collective result-buffer bytes, weighting while-body ops by trip
+    count when XLA recorded one (known_trip_count / known_induction_variable)."""
+    # Split into computations; track which are while bodies w/ trip counts.
+    trip_counts = {}
+    for m in re.finditer(
+            r'while\(.*?\).*?body=%?([\w.\-]+).*?'
+            r'known_trip_count.*?"n"\s*:\s*"?(\d+)"?',
+            hlo_text, re.S):
+        body, n = m.group(1), int(m.group(2))
+        trip_counts[body] = max(trip_counts.get(body, 1), n)
+    # fallback: trip_count attr inline
+    for m in re.finditer(
+            r'body=%?([\w.\-]+)[^\n]*trip_count=(\d+)', hlo_text):
+        trip_counts[m.group(1)] = max(
+            trip_counts.get(m.group(1), 1), int(m.group(2)))
+
+    stats = {op: 0.0 for op in _COLL_OPS}
+    counts = {op: 0 for op in _COLL_OPS}
+    current_comp = None
+    weight = 1
+    for line in hlo_text.splitlines():
+        header = re.match(r"\s*(?:%?)([\w.\-]+)\s*\([^)]*\)\s*->", line)
+        if line and not line[0].isspace():
+            m = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)", line.strip())
+            if m and "(" in line:
+                current_comp = m.group(1)
+                weight = trip_counts.get(current_comp, 1)
+        m = _OP_RE.search(line)
+        if m and "-done(" not in line:
+            op = m.group("op")
+            stats[op] += _shape_bytes(m.group("type")) * weight
+            counts[op] += weight
+    stats["total_bytes"] = sum(stats[o] for o in _COLL_OPS)
+    stats["counts"] = counts
+    return stats
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float               # module total (per-device x chips)
+    hlo_bytes: float
+    collective_bytes: float
+    model_flops: float
+    per_device_hbm: Optional[float] = None
+    dot_flops: float = 0.0         # matmul-only flops (remat-waste view)
+    coll_counts: Optional[dict] = None
+
+    @property
+    def t_compute(self):
+        return self.hlo_flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self):
+        return self.hlo_bytes / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self):
+        return self.collective_bytes / (self.chips * ICI_BW)
+
+    @property
+    def bottleneck(self):
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flop_ratio(self):
+        return self.model_flops / max(self.hlo_flops, 1.0)
+
+    @property
+    def roofline_fraction(self):
+        """compute-term share of the max term — 1.0 means perfectly
+        compute-bound (the roofline)."""
+        t = max(self.t_compute, self.t_memory, self.t_collective)
+        return self.t_compute / t if t else 0.0
+
+    def row(self):
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_flops": self.hlo_flops, "hlo_bytes": self.hlo_bytes,
+            "collective_bytes": self.collective_bytes,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "dot_flops": self.dot_flops,
+            "useful_flop_ratio": self.useful_flop_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "per_device_hbm": self.per_device_hbm,
+            "coll_counts": self.coll_counts,
+        }
+
+
+def analyze_compiled(compiled, *, chips: int):
+    """Trip-count-aware per-module costs from the compiled artifact.
+
+    Returns dict with module-total flops/bytes/collective bytes (per-device
+    parsed costs x chips) — see hlo_cost.HloCostModel for methodology.
+    """
+    from repro.roofline.hlo_cost import HloCostModel
+    m = HloCostModel(compiled.as_text())
+    coll = m.collective_bytes()
+    return {
+        "flops": m.flops() * chips,
+        "dot_flops": m.dot_flops_only() * chips,
+        "bytes": m.bytes_accessed() * chips,
+        "collective_bytes": coll["total_bytes"] * chips,
+        "coll_counts": coll["counts"],
+    }
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N*D (train) / 2*N*D (fwd-only), N = active params."""
+    n = cfg.active_param_count
+    tokens = shape.global_batch * (1 if shape.kind == "decode"
+                                   else shape.seq_len)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n * tokens
+
+
+def extract_cost(compiled) -> Dict[str, float]:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0))}
+
+
+def parse_memory_analysis(compiled) -> Optional[float]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return None
+    for attr in ("temp_size_in_bytes",):
+        pass
+    try:
+        total = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                 + ma.temp_size_in_bytes + ma.generated_code_size_in_bytes)
+        return float(total)
+    except Exception:
+        return None

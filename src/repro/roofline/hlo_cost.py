@@ -1,0 +1,479 @@
+"""Trip-count-aware HLO cost analysis.
+
+XLA's ``compiled.cost_analysis()`` counts every computation ONCE — a
+``lax.scan`` over 96 layers therefore under-reports FLOPs/bytes by ~96×
+(verified experimentally; see EXPERIMENTS.md §Roofline methodology). Since
+all our models scan over layers (and the train step scans over
+microbatches), we parse the optimized HLO ourselves:
+
+1. split the module into computations and build the call graph
+   (``while`` bodies/conditions, ``fusion``/``call``/``conditional``
+   callees),
+2. weight each computation by the product of caller weights ×
+   ``known_trip_count`` of its calling ``while`` ops,
+3. FLOPs: 2·M·N·K per ``dot`` (shapes resolved through a module-wide
+   symbol table) + 1/element for elementwise arithmetic ops, × weight,
+4. bytes: Σ (operand + result bytes) per op at the scheduled level
+   (fusion interfaces, not fusion internals — matching HBM traffic),
+   × weight,
+5. collective bytes: Σ operand bytes of all-gather / all-reduce /
+   reduce-scatter / all-to-all / collective-permute, × weight.
+
+All counts are per-device (the module is the SPMD-partitioned program);
+callers multiply by chip count where the total is wanted.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+    "s8": 1, "u8": 1, "pred": 1, "s4": 1, "u4": 1,
+}
+
+_COMP_HEADER = re.compile(
+    r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+_OP_NAME = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*")
+_OPCODE = re.compile(r"^([a-z][\w\-]*)\(")
+_SHAPE = re.compile(r"([a-z0-9_]+)\[([0-9,]*)\]")
+_CALLEE = re.compile(
+    r"(?:body|condition|calls|to_apply)=%?([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP = re.compile(r"known_trip_count\D*?(\d+)")
+_OPERANDS = re.compile(r"%([\w.\-]+)")
+
+# elementwise-ish ops counted at 1 flop / output element
+_EW_OPS = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum",
+    "exponential", "log", "rsqrt", "sqrt", "tanh", "logistic", "power",
+    "negate", "abs", "floor", "ceil", "round-nearest-even", "sign",
+    "cosine", "sine", "expm1", "log1p", "atan2", "remainder",
+}
+# ops that move no HBM bytes themselves (while/call/conditional pass
+# loop-carried buffers by alias; their bodies are counted separately)
+_FREE_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "while", "call",
+    "conditional", "custom-call",
+}
+# slicing ops touch only the slice, not the (aliased) full buffer
+_SLICE_OPS = {"dynamic-slice", "dynamic-update-slice", "slice"}
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+
+def _shape_elems_bytes(type_str: str) -> Tuple[int, int]:
+    """Total (elements, bytes) over possibly-tuple type strings."""
+    elems = 0
+    nbytes = 0
+    for dt, dims in _SHAPE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        nbytes += n * _DTYPE_BYTES[dt]
+    return elems, nbytes
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    type_str: str
+    opcode: str
+    line: str
+
+
+@dataclasses.dataclass
+class _Computation:
+    name: str
+    ops: List[_Op] = dataclasses.field(default_factory=list)
+    is_fusion_body: bool = False
+    is_scalar_body: bool = False     # reduce/sort/scatter to_apply
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.computations: Dict[str, _Computation] = {}
+        self.entry: Optional[str] = None
+        self.symbols: Dict[str, str] = {}          # op name -> type string
+        self._parse(hlo_text)
+        self.weights = self._compute_weights()
+
+    # -- parsing -----------------------------------------------------------
+
+    @staticmethod
+    def _split_op_line(raw: str):
+        """'%name = TYPE opcode(...)' -> (name, type_str, opcode) or None.
+        Handles tuple types '(f32[..], s32[])' with balanced parens."""
+        m = _OP_NAME.match(raw)
+        if not m:
+            return None
+        name = m.group(1)
+        rest = raw[m.end():]
+        if rest.startswith("("):                       # tuple type
+            depth = 0
+            for i, ch in enumerate(rest):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        break
+            type_str, rest = rest[:i + 1], rest[i + 1:]
+        else:
+            sp = rest.find(" ")
+            if sp < 0:
+                return None
+            type_str, rest = rest[:sp], rest[sp:]
+        rest = rest.lstrip()
+        mo = _OPCODE.match(rest)
+        if not mo:
+            return None
+        return name, type_str, mo.group(1)
+
+    def _parse(self, txt: str) -> None:
+        current: Optional[_Computation] = None
+        for raw in txt.splitlines():
+            if raw and not raw[0].isspace():
+                m = _COMP_HEADER.match(raw)
+                if m and "{" in raw:
+                    current = _Computation(m.group(1))
+                    self.computations[current.name] = current
+                    if raw.startswith("ENTRY"):
+                        self.entry = current.name
+                    continue
+            if current is None:
+                continue
+            parsed = self._split_op_line(raw)
+            if parsed:
+                name, type_str, opcode = parsed
+                self.symbols[name] = type_str
+                current.ops.append(_Op(name, type_str, opcode, raw))
+
+        # classify fusion/scalar bodies
+        for comp in self.computations.values():
+            for op in comp.ops:
+                line = op.line
+                for callee in _CALLEE.findall(line):
+                    if callee not in self.computations:
+                        continue
+                    if op.opcode == "fusion":
+                        self.computations[callee].is_fusion_body = True
+                    elif op.opcode in ("reduce", "reduce-window", "scatter",
+                                       "sort", "select-and-scatter",
+                                       "all-reduce", "reduce-scatter",
+                                       "map"):
+                        self.computations[callee].is_scalar_body = True
+
+    # -- call-graph weights ----------------------------------------------------
+
+    def _compute_weights(self) -> Dict[str, float]:
+        edges: Dict[str, List[Tuple[str, float]]] = {
+            c: [] for c in self.computations}
+        for comp in self.computations.values():
+            for op in comp.ops:
+                line = op.line
+                mult = 1.0
+                if op.opcode == "while":
+                    t = _TRIP.search(line)
+                    mult = float(t.group(1)) if t else 1.0
+                for callee in _CALLEE.findall(line):
+                    if callee in self.computations:
+                        edges[comp.name].append((callee, mult))
+                mb = _BRANCHES.search(line)
+                if mb:
+                    for br in _OPERANDS.findall(mb.group(1)):
+                        if br in self.computations:
+                            edges[comp.name].append((br, 1.0))
+
+        weights = {c: 0.0 for c in self.computations}
+        if self.entry is None:
+            return weights
+        weights[self.entry] = 1.0
+        # propagate in topological order via repeated relaxation (call
+        # graphs are small; no recursion in HLO)
+        for _ in range(len(self.computations)):
+            changed = False
+            acc = {c: 0.0 for c in self.computations}
+            acc[self.entry] = 1.0
+            for caller, outs in edges.items():
+                for callee, mult in outs:
+                    acc[callee] += weights[caller] * mult
+            for c in acc:
+                if abs(acc[c] - weights[c]) > 1e-9:
+                    changed = True
+            weights = acc
+            if not changed:
+                break
+        return weights
+
+    # -- costs -------------------------------------------------------------
+
+    def _dot_flops(self, op: _Op) -> float:
+        _, line = op.name, op.line
+        out_elems, _ = _shape_elems_bytes(op.type_str)
+        # contracting dims from the lhs operand's shape
+        args = line.split("(", 1)[1]
+        operands = _OPERANDS.findall(args.split(")", 1)[0])
+        k = 1
+        mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+        if operands and mc:
+            lhs_type = self.symbols.get(operands[0], "")
+            shapes = _SHAPE.findall(lhs_type)
+            if shapes:
+                dims = [int(d) for d in shapes[0][1].split(",") if d]
+                for idx in mc.group(1).split(","):
+                    if idx and int(idx) < len(dims):
+                        k *= dims[int(idx)]
+        return 2.0 * out_elems * k
+
+    def _fusion_root_opcode(self, op: _Op) -> Optional[str]:
+        m = _CALLEE.search(op.line)
+        if not m:
+            return None
+        body = self.computations.get(m.group(1))
+        if not body:
+            return None
+        for o in body.ops:
+            if "ROOT" in o.line:
+                return o.opcode
+        return body.ops[-1].opcode if body.ops else None
+
+    def _op_operands(self, op: _Op) -> List[str]:
+        args = op.line.split("(", 1)[1]
+        return _OPERANDS.findall(args.split(")", 1)[0])
+
+    def _fusion_bytes(self, op: _Op) -> float:
+        """Fusion traffic with slice-awareness: an operand whose only use
+        inside the body is a ``dynamic-slice`` contributes the slice size,
+        not the full (possibly loop-stacked) buffer; a ``dynamic-update-
+        slice`` root writes the update, not the whole aliased buffer."""
+        m = _CALLEE.search(op.line)
+        body = self.computations.get(m.group(1)) if m else None
+        _, out_bytes = _shape_elems_bytes(op.type_str)
+        operands = self._op_operands(op)
+        if body is None:
+            return out_bytes + sum(
+                _shape_elems_bytes(self.symbols.get(o, ""))[1]
+                for o in operands)
+        # body parameter names by index + their consumers
+        param_name: Dict[int, str] = {}
+        for o in body.ops:
+            if o.opcode == "parameter":
+                pm = re.search(r"parameter\((\d+)\)", o.line)
+                if pm:
+                    param_name[int(pm.group(1))] = o.name
+        consumers: Dict[str, List[_Op]] = {}
+        for o in body.ops:
+            if o.opcode == "parameter":
+                continue
+            for ref in self._op_operands(o):
+                consumers.setdefault(ref, []).append(o)
+        # dynamic-update-slices anywhere in the body: their target buffers
+        # are aliased in-place — traffic is the update slice, not the full
+        # (loop-stacked) buffer. The XLA *CPU* backend wraps bf16 DUS in
+        # full-buffer f32 converts (convert → DUS → convert); a TPU would
+        # alias in place, so we resolve targets/roots through "transparent"
+        # unary ops (convert/bitcast/copy/reshape) when detecting aliasing.
+        transparent = {"convert", "bitcast", "copy", "reshape"}
+        by_name = {o.name: o for o in body.ops}
+
+        def resolve(name: str) -> str:
+            seen = set()
+            while name in by_name and name not in seen:
+                seen.add(name)
+                o = by_name[name]
+                if o.opcode in transparent:
+                    ops_o = self._op_operands(o)
+                    if ops_o:
+                        name = ops_o[0]
+                        continue
+                break
+            return name
+
+        dus_targets = set()
+        dus_names = set()
+        dus_update_bytes = 0.0
+        max_target = 0.0
+        for o in body.ops:
+            if o.opcode != "dynamic-update-slice":
+                continue
+            dus_names.add(o.name)
+            ops_d = self._op_operands(o)
+            if ops_d:
+                dus_targets.add(resolve(ops_d[0]))
+                max_target = max(max_target, _shape_elems_bytes(
+                    self.symbols.get(ops_d[0], ""))[1])
+            upd = [_shape_elems_bytes(self.symbols.get(x, ""))[1]
+                   for x in ops_d[1:]]
+            big = [s for s in upd if s > 16]
+            dus_update_bytes += min(big) if big else 0.0
+
+        root_src = None
+        for o in body.ops:
+            if "ROOT" in o.line:
+                root_src = resolve(o.name)
+
+        total = 0.0
+        if dus_names and (out_bytes >= 0.9 * max_target
+                          or root_src in dus_names):
+            total += dus_update_bytes        # write = the update slice(s)
+        else:
+            total += out_bytes
+        def effective_consumers(name: str):
+            """Consumers, looking through transparent unary ops."""
+            out, queue, seen = [], [name], set()
+            while queue:
+                n = queue.pop()
+                if n in seen:
+                    continue
+                seen.add(n)
+                for c in consumers.get(n, []):
+                    if c.opcode in transparent:
+                        queue.append(c.name)
+                    else:
+                        out.append(c)
+            return out
+
+        for i, operand in enumerate(operands):
+            full = _shape_elems_bytes(self.symbols.get(operand, ""))[1]
+            pname = param_name.get(i)
+            if pname is not None and pname in dus_targets:
+                continue                      # aliased in-place target
+            cons = effective_consumers(pname) if pname else []
+            if cons and all(c.opcode == "dynamic-slice" for c in cons):
+                total += sum(_shape_elems_bytes(c.type_str)[1]
+                             for c in cons)
+            else:
+                total += full
+        return total
+
+    def _op_bytes(self, op: _Op) -> float:
+        if op.opcode in _FREE_OPS:
+            return 0.0
+        _, out_bytes = _shape_elems_bytes(op.type_str)
+        if op.opcode == "fusion":
+            return self._fusion_bytes(op)
+        operand_bytes = [
+            _shape_elems_bytes(self.symbols.get(o, ""))[1]
+            for o in self._op_operands(op)]
+        if op.opcode in _SLICE_OPS:
+            # aliased slicing: traffic = 2 x the slice, not the full buffer
+            candidates = [b for b in [out_bytes] + operand_bytes if b > 16]
+            return 2.0 * min(candidates) if candidates else 0.0
+        return float(out_bytes) + float(sum(operand_bytes))
+
+    def flops(self) -> float:
+        total = 0.0
+        for comp in self.computations.values():
+            w = self.weights.get(comp.name, 0.0)
+            if w == 0.0:
+                continue
+            for op in comp.ops:
+                if op.opcode == "dot":
+                    total += w * self._dot_flops(op)
+                elif op.opcode == "convolution":
+                    # not used by our models; approximate via output elems
+                    out_elems, _ = _shape_elems_bytes(op.type_str)
+                    total += w * 2.0 * out_elems
+                elif op.opcode in _EW_OPS:
+                    out_elems, _ = _shape_elems_bytes(op.type_str)
+                    total += w * out_elems
+        return total
+
+    def dot_flops_only(self) -> float:
+        total = 0.0
+        for comp in self.computations.values():
+            w = self.weights.get(comp.name, 0.0)
+            for op in comp.ops:
+                if w and op.opcode == "dot":
+                    total += w * self._dot_flops(op)
+        return total
+
+    def bytes_accessed(self) -> float:
+        total = 0.0
+        for comp in self.computations.values():
+            if comp.is_fusion_body or comp.is_scalar_body:
+                continue                      # fused internals stay on-chip
+            w = self.weights.get(comp.name, 0.0)
+            if w == 0.0:
+                continue
+            for op in comp.ops:
+                total += w * self._op_bytes(op)
+        return total
+
+    @staticmethod
+    def _crosses_boundary(line: str, boundary: int) -> bool:
+        """True if any replica/partition group mixes devices from both
+        sides of ``boundary`` (e.g. 256 = the pod/DCN edge)."""
+        m = re.search(r"(?:replica_groups|partition_groups)="
+                      r"(\{\{[^=]*?\}\}|\[[^\]]*\]<=\[[^\]]*\]"
+                      r"(?:T\([0-9,]+\))?)", line)
+        if not m:
+            return False
+        spec = m.group(1)
+        if spec.startswith("{{"):
+            for grp in re.findall(r"\{([0-9,]+)\}", spec):
+                ids = [int(x) for x in grp.split(",") if x]
+                if (any(i < boundary for i in ids)
+                        and any(i >= boundary for i in ids)):
+                    return True
+            return False
+        # iota form [G,S]<=[dims](T(perm)): decode exactly
+        mi = re.match(r"\[(\d+),(\d+)\]<=\[([0-9,]+)\]"
+                      r"(?:T\(([0-9,]+)\))?", spec)
+        if not mi:
+            return True                      # unknown form: conservative
+        import numpy as _np
+        g, s = int(mi.group(1)), int(mi.group(2))
+        dims = [int(x) for x in mi.group(3).split(",")]
+        arr = _np.arange(int(_np.prod(dims))).reshape(dims)
+        if mi.group(4):
+            arr = arr.transpose([int(x) for x in mi.group(4).split(",")])
+        groups = arr.reshape(g, s)
+        lo = (groups < boundary).any(axis=1)
+        hi = (groups >= boundary).any(axis=1)
+        return bool((lo & hi).any())
+
+    def collective_bytes(self, boundary: Optional[int] = None
+                         ) -> Dict[str, float]:
+        stats = {op: 0.0 for op in _COLL_OPS}
+        counts = {op: 0 for op in _COLL_OPS}
+        cross = 0.0
+        for comp in self.computations.values():
+            w = self.weights.get(comp.name, 0.0)
+            if w == 0.0:
+                continue
+            for op in comp.ops:
+                opc = op.opcode
+                base = None
+                for c in _COLL_OPS:
+                    if opc == c or opc == c + "-start":
+                        base = c
+                        break
+                if base is None:
+                    continue
+                # operand bytes (assignment methodology)
+                args = op.line.split("(", 1)[1]
+                nbytes = 0.0
+                for operand in _OPERANDS.findall(args.split(")", 1)[0]):
+                    t = self.symbols.get(operand)
+                    if t:
+                        nbytes += _shape_elems_bytes(t)[1]
+                stats[base] += w * nbytes
+                counts[base] += int(w)
+                if boundary and self._crosses_boundary(op.line, boundary):
+                    cross += w * nbytes
+        stats["total_bytes"] = sum(stats[c] for c in _COLL_OPS)
+        stats["counts"] = counts
+        if boundary:
+            stats["cross_boundary_bytes"] = cross
+        return stats

@@ -1,0 +1,282 @@
+"""Serving substrate: prefill-with-cache + decode step + batched server.
+
+``prefill_with_cache`` runs the full-sequence forward while *capturing* the
+per-layer caches in exactly the layout ``transformer.init_cache`` allocates
+(KV heaps / MLA latents / SSM states / sliding-window ring buffers), so the
+prefill→decode handoff is bit-consistent with incremental decoding — the
+invariant tests/test_serve.py checks token-by-token.
+
+:class:`BatchServer` is the paper's "serve a small model with batched
+requests" driver adapted to the pilot world: requests stream in (possibly
+through a Broker topic), are packed into fixed decode slots, and each engine
+step decodes one token for every active slot (static shapes — one jit).
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+
+
+# ---------------------------------------------------------------------------
+# prefill with cache capture
+# ---------------------------------------------------------------------------
+
+
+def _ring_scatter(kv, window: int):
+    """Last-`window` kv entries, ring-layout (slot = pos % window)."""
+    b, s, hkv, hd = kv.shape
+    if s <= window:
+        pad = jnp.zeros((b, window - s, hkv, hd), kv.dtype)
+        return jnp.concatenate([kv, pad], axis=1)
+    tail = kv[:, s - window:]                       # positions s-w .. s-1
+    slots = (jnp.arange(s - window, s)) % window
+    out = jnp.zeros((b, window, hkv, hd), kv.dtype)
+    return out.at[:, slots].set(tail)
+
+
+def _block_prefill(lp, x, cos, sin, cfg: ArchConfig, max_len: int,
+                   cache_dtype, *, impl, chunk):
+    """block_forward + cache capture. Returns (x, cache_entry)."""
+    h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    b, s, _ = x.shape
+    entry: Dict[str, Any] = {}
+    if cfg.attn_kind == "gqa":
+        a, (k, v) = L.gqa_forward(lp["attn"], h, cos, sin, cfg, impl=impl,
+                                  window=cfg.sliding_window, chunk=chunk)
+        x = x + a
+        size = max_len if cfg.sliding_window is None else min(
+            max_len, cfg.sliding_window)
+        entry["k"] = _pad_cache(k.astype(cache_dtype), size,
+                                cfg.sliding_window)
+        entry["v"] = _pad_cache(v.astype(cache_dtype), size,
+                                cfg.sliding_window)
+    elif cfg.attn_kind == "mla":
+        a, (ckv, krope) = L.mla_forward(lp["attn"], h, cos, sin, cfg,
+                                        impl=impl, chunk=chunk)
+        x = x + a
+        entry["ckv"] = _pad_seq(ckv.astype(cache_dtype), max_len)
+        entry["krope"] = _pad_seq(krope.astype(cache_dtype), max_len)
+    elif cfg.attn_kind == "hybrid":
+        ha = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        a, (k, v) = L.gqa_forward(lp["mixer"]["attn"], ha, cos, sin, cfg,
+                                  impl=impl, window=cfg.sliding_window,
+                                  chunk=chunk)
+        m, (ssm_state, conv_state) = L.ssm_forward(
+            lp["mixer"]["ssm"], ha, cfg, return_state=True)
+        y = 0.5 * (L.rms_norm(a, lp["mixer"]["attn_norm"], cfg.norm_eps)
+                   + L.rms_norm(m, lp["mixer"]["ssm_norm_out"],
+                                cfg.norm_eps))
+        x = x + y
+        size = max_len if cfg.sliding_window is None else min(
+            max_len, cfg.sliding_window)
+        entry["k"] = _pad_cache(k.astype(cache_dtype), size,
+                                cfg.sliding_window)
+        entry["v"] = _pad_cache(v.astype(cache_dtype), size,
+                                cfg.sliding_window)
+        entry["ssm"] = ssm_state
+        entry["conv"] = conv_state
+    else:                                            # pure SSM
+        y, (ssm_state, conv_state) = L.ssm_forward(lp["ssm"], h, cfg,
+                                                   return_state=True)
+        x = x + y
+        entry["ssm"] = ssm_state
+        entry["conv"] = conv_state
+    if cfg.moe is not None:
+        h2 = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        y, _ = L.moe_forward(lp["moe"], h2, cfg)
+        x = x + y
+    elif cfg.d_ff:
+        h2 = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + L.ffn_forward(lp["ffn"], h2, cfg.ffn_kind)
+    return x, entry
+
+
+def _pad_seq(x, max_len: int):
+    s = x.shape[1]
+    if s >= max_len:
+        return x[:, :max_len]
+    widths = [(0, 0)] * x.ndim
+    widths[1] = (0, max_len - s)
+    return jnp.pad(x, widths)
+
+
+def _pad_cache(kv, size: int, window):
+    if window is not None and kv.shape[1] > size:
+        return _ring_scatter(kv, size)
+    return _pad_seq(kv, size)
+
+
+def prefill_with_cache(params, cfg: ArchConfig, inputs, max_len: int, *,
+                       impl="dense", chunk=1024, cache_dtype=jnp.bfloat16,
+                       rules=None):
+    """Returns (logits (B,S,V...), cache) — cache layout == init_cache."""
+    x = T._embed_inputs(params, cfg, inputs)
+    seq_len = x.shape[1]
+    cos, sin = T._positions_cos_sin(cfg, inputs, seq_len, T._rope_dim(cfg))
+
+    def body(h, lp):
+        h, entry = _block_prefill(lp, h, cos, sin, cfg, max_len,
+                                  cache_dtype, impl=impl, chunk=chunk)
+        return h, entry
+
+    x, cache = lax.scan(body, x, params["blocks"])
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = T._logits(params, cfg, x, rules)
+    return logits, cache
+
+
+def make_prefill_fn(cfg: ArchConfig, max_len: int, *, impl="dense",
+                    chunk=1024, cache_dtype=jnp.bfloat16, rules=None):
+    @jax.jit
+    def prefill(params, inputs):
+        return prefill_with_cache(params, cfg, inputs, max_len, impl=impl,
+                                  chunk=chunk, cache_dtype=cache_dtype,
+                                  rules=rules)
+    return prefill
+
+
+def make_decode_fn(cfg: ArchConfig, *, rules=None):
+    @jax.jit
+    def decode(params, cache, inputs):
+        return T.decode_step(params, cfg, cache, inputs, rules=rules)
+    return decode
+
+
+# ---------------------------------------------------------------------------
+# batched serving
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Request:
+    request_id: str
+    prompt: np.ndarray                      # (S,) int32 token ids
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    result_tokens: List[int] = field(default_factory=list)
+    done: threading.Event = field(default_factory=threading.Event)
+    t_submit: float = field(default_factory=time.monotonic)
+    t_first_token: Optional[float] = None
+    t_done: Optional[float] = None
+
+
+class BatchServer:
+    """Slot-based batched decoder (static shapes, one jitted decode).
+
+    Simplification vs. continuous batching: slots share a step counter, so a
+    new request joining mid-flight pads its prompt into the *shared* length
+    grid (prefill at slot level). Each slot has an independent KV region
+    because caches are per-slot batched arrays.
+    """
+
+    def __init__(self, params, cfg: ArchConfig, *, n_slots: int = 4,
+                 max_len: int = 512, seed: int = 0):
+        self.params = params
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self._prefill1 = make_prefill_fn(cfg, max_len)
+        self._decode = make_decode_fn(cfg)
+        self._queue: "queue.Queue[Request]" = queue.Queue()
+        self._key = jax.random.key(seed)
+        self.metrics: Dict[str, float] = {"decoded_tokens": 0,
+                                          "completed": 0}
+
+    def submit(self, req: Request) -> Request:
+        self._queue.put(req)
+        return req
+
+    def _sample(self, logits, temperature: float):
+        if self.cfg.n_codebooks > 1:
+            logits = logits[..., 0, :]       # first codebook stream
+        logits = logits[..., :self.cfg.vocab_size]   # drop vocab padding
+        if temperature <= 0:
+            return int(jnp.argmax(logits[0, -1]))
+        self._key, k = jax.random.split(self._key)
+        return int(jax.random.categorical(k, logits[0, -1] / temperature))
+
+    def run(self, *, max_requests: Optional[int] = None,
+            idle_timeout_s: float = 2.0) -> List[Request]:
+        """Serve until the queue stays empty for ``idle_timeout_s`` (or
+        ``max_requests`` completed). One request per slot wave; waves of up
+        to n_slots requests decode in lockstep."""
+        completed: List[Request] = []
+        pending: List[Request] = []
+        while True:
+            deadline = time.monotonic() + idle_timeout_s
+            while len(pending) < self.n_slots and time.monotonic() < deadline:
+                try:
+                    pending.append(self._queue.get(timeout=0.05))
+                except queue.Empty:
+                    if pending:
+                        break
+            if not pending:
+                return completed
+            # waves are bucketed by exact prompt length: a shared static
+            # prefill shape with left-padding would corrupt RoPE positions
+            # and causal masks for the shorter prompts.
+            plen = len(pending[0].prompt)
+            wave = [r for r in pending if len(r.prompt) == plen][
+                :self.n_slots]
+            pending = [r for r in pending if r not in wave]
+            self._serve_wave(wave)
+            completed.extend(wave)
+            self.metrics["completed"] += len(wave)
+            if max_requests and len(completed) >= max_requests:
+                return completed
+
+    def _serve_wave(self, wave: List[Request]) -> None:
+        cfg = self.cfg
+        s_max = len(wave[0].prompt)                   # bucketed: equal lens
+        b = len(wave)
+        toks = np.zeros((b, s_max), np.int32)
+        for i, r in enumerate(wave):
+            toks[i, :] = r.prompt
+        if cfg.n_codebooks > 1:
+            toks = np.repeat(toks[..., None], cfg.n_codebooks, axis=-1)
+        inputs = {"tokens": jnp.asarray(toks)}
+        if cfg.input_mode == "embeddings":
+            raise NotImplementedError("vlm serving uses embedding frontend")
+        logits, cache = self._prefill1(self.params, inputs)
+        for i, r in enumerate(wave):
+            r.t_first_token = time.monotonic()
+        length = s_max
+        n_steps = max(r.max_new_tokens for r in wave)
+        last = logits[:, -1] if cfg.n_codebooks == 1 else logits[:, -1, 0]
+        next_tok = np.asarray(jnp.argmax(last[..., :cfg.vocab_size],
+                                         axis=-1), np.int32)
+        for i, r in enumerate(wave):
+            r.result_tokens.append(int(next_tok[i]))
+        for step in range(n_steps - 1):
+            t = next_tok[:, None]
+            if cfg.n_codebooks > 1:
+                t = np.repeat(t[..., None], cfg.n_codebooks, axis=-1)
+            dinp = {"tokens": jnp.asarray(t),
+                    "length": jnp.asarray(length, jnp.int32)}
+            logits, cache = self._decode(self.params, cache, dinp)
+            lg = logits[:, 0] if cfg.n_codebooks == 1 else logits[:, 0, 0]
+            next_tok = np.asarray(jnp.argmax(lg[..., :cfg.vocab_size],
+                                             axis=-1), np.int32)
+            self.metrics["decoded_tokens"] += b
+            length += 1
+            for i, r in enumerate(wave):
+                if len(r.result_tokens) < r.max_new_tokens:
+                    r.result_tokens.append(int(next_tok[i]))
+        now = time.monotonic()
+        for r in wave:
+            r.t_done = now
+            r.done.set()

@@ -1,0 +1,2 @@
+from repro.train.step import (TrainConfig, make_train_step, init_train_state,
+                              train_state_pspecs, batch_pspec)

@@ -1,0 +1,10 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS device-count override here — smoke
+tests must see the real single CPU device (the 512-device override belongs
+exclusively to launch/dryrun.py)."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

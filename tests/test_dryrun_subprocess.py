@@ -1,0 +1,31 @@
+"""Dry-run smoke in a subprocess (the 512-device XLA flag must not leak
+into this pytest process). Kept cheap: one small cell per mesh.
+
+Skipped unless RUN_DRYRUN_TESTS=1 (each cell compiles for ~1–2 min)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+pytestmark = pytest.mark.skipif(
+    os.environ.get("RUN_DRYRUN_TESTS") != "1",
+    reason="set RUN_DRYRUN_TESTS=1 to compile dry-run cells (slow)")
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(args):
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", *args],
+        capture_output=True, text=True, timeout=1200, env=env, cwd=ROOT)
+
+
+@pytest.mark.parametrize("mesh_flag", [[], ["--multi-pod"]])
+def test_dryrun_cell_compiles(mesh_flag):
+    r = _run(["--arch", "internlm2-1.8b", "--shape", "decode_32k",
+              *mesh_flag])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "1 cells OK, 0 failed" in r.stdout
+    assert "bottleneck=" in r.stdout

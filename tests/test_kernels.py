@@ -1,0 +1,174 @@
+"""Per-kernel shape/dtype sweeps: every Pallas kernel (interpret mode)
+against its ref.py pure-jnp oracle (assignment requirement)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.kmeans import kmeans_assign
+from repro.kernels.ssd import ssd_chunk_scan
+
+RNG = np.random.default_rng(42)
+
+
+def _tol(dtype):
+    return dict(atol=5e-2, rtol=5e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+FLASH_CASES = [
+    # (b, sq, sk, h, hkv, d, causal, window)
+    (1, 128, 128, 2, 2, 64, True, None),
+    (2, 256, 256, 4, 2, 64, True, None),        # GQA 2x
+    (1, 384, 384, 8, 1, 32, True, None),        # MQA
+    (1, 128, 128, 4, 4, 128, False, None),      # bidirectional
+    (2, 200, 200, 2, 2, 64, True, 64),          # unaligned + window
+    (1, 512, 512, 2, 1, 64, True, 128),         # long + window
+    (1, 96, 96, 2, 2, 16, True, None),          # small head_dim, sub-block
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_vs_ref(case, dtype):
+    b, sq, sk, h, hkv, d, causal, window = case
+    q = jnp.asarray(RNG.standard_normal((b, sq, h, d)), dtype)
+    k = jnp.asarray(RNG.standard_normal((b, sk, hkv, d)), dtype)
+    v = jnp.asarray(RNG.standard_normal((b, sk, hkv, d)), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          interpret=True)
+    exp = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), **_tol(dtype))
+
+
+def test_flash_attention_block_shapes():
+    """Different BlockSpec tilings give identical results."""
+    q = jnp.asarray(RNG.standard_normal((1, 256, 2, 64)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((1, 256, 2, 64)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((1, 256, 2, 64)), jnp.float32)
+    base = flash_attention(q, k, v, block_q=128, block_k=128,
+                           interpret=True)
+    for bq, bk in [(64, 64), (128, 64), (64, 128), (256, 256)]:
+        out = flash_attention(q, k, v, block_q=bq, block_k=bk,
+                              interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(base),
+                                   atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# kmeans assignment
+# ---------------------------------------------------------------------------
+
+KMEANS_CASES = [
+    (100, 32, 25), (1000, 32, 25), (257, 7, 3), (4096, 64, 100),
+    (25, 32, 25), (513, 128, 128), (2500, 32, 25),
+]
+
+
+@pytest.mark.parametrize("case", KMEANS_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kmeans_assign_vs_ref(case, dtype):
+    n, f, k = case
+    pts = jnp.asarray(RNG.standard_normal((n, f)) * 5, dtype)
+    cent = jnp.asarray(RNG.standard_normal((k, f)) * 5, dtype)
+    ids, dmin = kmeans_assign(pts, cent, interpret=True)
+    ids_r, dmin_r = ref.kmeans_assign_ref(pts, cent)
+    # argmin ties under low precision: allow id mismatch only if distances
+    # are ~equal
+    mism = np.asarray(ids) != np.asarray(ids_r)
+    if mism.any():
+        np.testing.assert_allclose(np.asarray(dmin)[mism],
+                                   np.asarray(dmin_r)[mism],
+                                   atol=1e-2, rtol=1e-2)
+    np.testing.assert_allclose(np.asarray(dmin, np.float32),
+                               np.asarray(dmin_r, np.float32),
+                               **_tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# SSD
+# ---------------------------------------------------------------------------
+
+SSD_CASES = [
+    # (b, s, nh, hd, g, ds, chunk)
+    (1, 64, 2, 16, 1, 16, 16),
+    (2, 128, 4, 32, 1, 16, 32),
+    (1, 256, 8, 64, 2, 32, 64),
+    (1, 256, 24, 64, 1, 128, 64),     # mamba2-130m dims
+    (2, 128, 4, 32, 4, 16, 128),      # chunk == seq
+]
+
+
+@pytest.mark.parametrize("case", SSD_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_ssd_vs_ref(case, dtype):
+    b, s, nh, hd, g, ds, chunk = case
+    xh = jnp.asarray(RNG.standard_normal((b, s, nh, hd)), dtype)
+    dt = jnp.asarray(RNG.uniform(0.001, 0.1, (b, s, nh)), jnp.float32)
+    A = -jnp.asarray(RNG.uniform(0.5, 2.0, (nh,)), jnp.float32)
+    B_ = jnp.asarray(RNG.standard_normal((b, s, g, ds)), dtype)
+    C_ = jnp.asarray(RNG.standard_normal((b, s, g, ds)), dtype)
+    D = jnp.asarray(RNG.standard_normal((nh,)), jnp.float32)
+    y, fin = ssd_chunk_scan(xh, dt, A, B_, C_, D, chunk=chunk,
+                            interpret=True)
+    y_r, fin_r = ref.ssd_ref(xh, dt, A, B_, C_, D)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_r, np.float32),
+                               atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(fin), np.asarray(fin_r),
+                               atol=1e-3, rtol=1e-3)
+
+
+def test_ssd_matches_layers_impl():
+    """kernels/ssd == models/layers.ssd_chunked (the model's jnp path)."""
+    from repro.models.layers import ssd_chunked
+    b, s, nh, hd, g, ds, chunk = 2, 128, 4, 32, 1, 16, 32
+    xh = jnp.asarray(RNG.standard_normal((b, s, nh, hd)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.001, 0.1, (b, s, nh)), jnp.float32)
+    A = -jnp.asarray(RNG.uniform(0.5, 2.0, (nh,)), jnp.float32)
+    B_ = jnp.asarray(RNG.standard_normal((b, s, g, ds)), jnp.float32)
+    C_ = jnp.asarray(RNG.standard_normal((b, s, g, ds)), jnp.float32)
+    D = jnp.asarray(RNG.standard_normal((nh,)), jnp.float32)
+    y_k, fin_k = ssd_chunk_scan(xh, dt, A, B_, C_, D, chunk=chunk,
+                                interpret=True)
+    y_l, fin_l = ssd_chunked(xh, dt, A, B_, C_, D, chunk,
+                             return_state=True)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_l),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(fin_k), np.asarray(fin_l),
+                               atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# ops wrappers route correctly
+# ---------------------------------------------------------------------------
+
+def test_ops_wrappers():
+    q = jnp.asarray(RNG.standard_normal((1, 128, 2, 64)), jnp.float32)
+    out = ops.flash_attention(q, q, q)
+    assert out.shape == q.shape
+    pts = jnp.asarray(RNG.standard_normal((100, 32)), jnp.float32)
+    cent = jnp.asarray(RNG.standard_normal((25, 32)), jnp.float32)
+    ids, dmin = ops.kmeans_assign(pts, cent)
+    assert ids.shape == (100,) and dmin.shape == (100,)
+
+
+def test_model_uses_pallas_attention():
+    """gqa_forward(impl='pallas') matches impl='dense'."""
+    from repro.configs import get_arch
+    from repro.models import transformer as T
+    cfg = get_arch("internlm2-1.8b").reduced()
+    params = T.init_params(jax.random.key(0), cfg)
+    inputs = {"tokens": jnp.ones((1, 128), jnp.int32),
+              "labels": jnp.zeros((1, 128), jnp.int32)}
+    ld, _ = T.forward(params, cfg, inputs, impl="dense", remat=False)
+    lp, _ = T.forward(params, cfg, inputs, impl="pallas", remat=False)
+    np.testing.assert_allclose(np.asarray(ld), np.asarray(lp),
+                               atol=2e-4, rtol=2e-4)

@@ -1,0 +1,85 @@
+"""MoE dispatch invariants: grouped vs ungrouped equivalence, sort-free
+position correctness, capacity gating, drop accounting."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_arch
+from repro.models import layers as L
+
+
+def _cfg(capacity_factor=8.0, top_k=2, n_experts=4):
+    base = get_arch("qwen3-moe-235b-a22b").reduced()
+    return dataclasses.replace(
+        base, moe=dataclasses.replace(base.moe, capacity_factor=capacity_factor,
+                                      top_k=top_k, n_experts=n_experts))
+
+
+def test_grouped_equals_ungrouped_with_headroom():
+    cfg = _cfg(capacity_factor=8.0)
+    p = L.moe_init(jax.random.key(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (4, 16, cfg.d_model))
+    y1, a1 = L.moe_forward(p, x, cfg, groups=1)
+    y4, a4 = L.moe_forward(p, x, cfg, groups=4)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y4), atol=1e-6)
+    assert abs(float(a1["lb_loss"]) - float(a4["lb_loss"])) < 1e-6
+
+
+def test_capacity_gate_falls_back_ungrouped():
+    """Tiny token counts must not take the grouped path (capacity floor
+    would oversize the buffer `groups`x)."""
+    cfg = _cfg(capacity_factor=1.25, n_experts=4)
+    p = L.moe_init(jax.random.key(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (2, 2, cfg.d_model))  # 4 toks
+    # groups=4 -> 1 token/group -> gate must fall back; result == groups=1
+    y1, _ = L.moe_forward(p, x, cfg, groups=1)
+    y4, _ = L.moe_forward(p, x, cfg, groups=4)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y4), atol=1e-6)
+
+
+@given(seed=st.integers(0, 100), n=st.integers(1, 300),
+       e=st.integers(1, 16))
+@settings(max_examples=20, deadline=None)
+def test_dispatch_positions_dense_per_expert(seed, n, e):
+    rng = np.random.default_rng(seed)
+    ids = jnp.asarray(rng.integers(0, e, size=(n,)), jnp.int32)
+    pos = np.asarray(L._dispatch_positions(ids, e))
+    for ex in range(e):
+        ps = np.sort(pos[np.asarray(ids) == ex])
+        assert (ps == np.arange(len(ps))).all()
+
+
+def test_dropped_tokens_contribute_zero():
+    """With capacity 8 and all tokens routed to one expert, overflow
+    tokens must contribute exactly zero output."""
+    cfg = _cfg(capacity_factor=0.01, top_k=1, n_experts=4)
+    p = L.moe_init(jax.random.key(0), cfg, jnp.float32)
+    # force router to prefer expert 0 strongly
+    p = dict(p)
+    p["router"] = jnp.zeros_like(p["router"]).at[:, 0].set(10.0)
+    x = jax.random.normal(jax.random.key(1), (1, 64, cfg.d_model))
+    y, aux = L.moe_forward(p, x, cfg)
+    assert float(aux["dropped_frac"]) > 0.5
+    # every dropped token's output row is exactly zero (gate * nothing);
+    # the zero count must equal the drop count exactly
+    norms = np.asarray(jnp.linalg.norm(y[0], axis=-1))
+    assert (norms == 0.0).sum() == round(64 * float(aux["dropped_frac"]))
+
+
+def test_moe_grad_flows_through_grouped_path():
+    cfg = _cfg(capacity_factor=2.0)
+    p = L.moe_init(jax.random.key(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (4, 8, cfg.d_model))
+
+    def loss(p):
+        y, aux = L.moe_forward(p, x, cfg, groups=4)
+        return jnp.sum(y ** 2) + aux["lb_loss"]
+
+    g = jax.grad(loss)(p)
+    for k in ("router", "w_gate", "w_up", "w_down"):
+        assert float(jnp.abs(g[k]).sum()) > 0, k
+        assert bool(jnp.isfinite(g[k]).all()), k

@@ -1,0 +1,17 @@
+"""Pipeline-parallelism correctness (subprocess: needs its own forced
+2-device host before jax init)."""
+import os
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_gpipe_matches_reference():
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tests", "pp_check.py")],
+        capture_output=True, text=True, timeout=900, env=env, cwd=ROOT)
+    assert r.returncode == 0, (r.stdout[-1500:], r.stderr[-1500:])
+    assert "PP == reference: OK" in r.stdout

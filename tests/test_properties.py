@@ -1,0 +1,199 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.broker import Broker
+from repro.core.monitoring import MetricsRegistry
+from repro.core.placement import (DEFAULT_LINKS, LinkModel, PlacementEngine,
+                                  TaskProfile, link_between)
+from repro.kernels import ref
+from repro.ml.isoforest import _c as iso_c
+from repro.optim import clip_by_global_norm, cosine_schedule
+from repro.optim.compression import int8_compress, int8_decompress
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# broker invariants
+# ---------------------------------------------------------------------------
+
+@given(n_msgs=st.integers(1, 40), n_parts=st.integers(1, 6),
+       seed=st.integers(0, 100))
+@settings(**SETTINGS)
+def test_broker_conserves_messages_and_order(n_msgs, n_parts, seed):
+    """Every produced message lands in exactly one partition; offsets are
+    dense and ordered; total bytes in == sum of message sizes."""
+    b = Broker()
+    t = b.create_topic("t", n_partitions=n_parts)
+    rng = np.random.default_rng(seed)
+    sizes = []
+    for i in range(n_msgs):
+        data = rng.standard_normal((int(rng.integers(1, 50)),))
+        m = t.produce(data)
+        sizes.append(m.nbytes)
+    ends = t.end_offsets()
+    assert sum(ends) == n_msgs
+    for p, end in enumerate(ends):
+        offs = [t.partitions[p].log[i].offset for i in range(end)]
+        assert offs == list(range(end))
+    assert t.metrics.counter(f"topic.{t.name}.bytes_in") == sum(sizes)
+
+
+# ---------------------------------------------------------------------------
+# quantization invariants
+# ---------------------------------------------------------------------------
+
+@given(st.lists(st.floats(-1e3, 1e3, allow_nan=False), min_size=1,
+                max_size=64))
+@settings(**SETTINGS)
+def test_int8_quantization_error_bound(xs):
+    g = jnp.asarray(xs, jnp.float32)
+    q, scale = int8_compress(g)
+    back = int8_decompress(q, scale)
+    # error bounded by scale/2 per element
+    assert float(jnp.max(jnp.abs(back - g))) <= float(scale) / 2 + 1e-6
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_cosine_schedule_bounds(step):
+    lr = cosine_schedule(1e-3, warmup=100, total=10_000)(step)
+    assert 0.0 < float(lr) <= 1e-3 + 1e-9
+
+
+@given(st.lists(st.floats(-100, 100, allow_nan=False), min_size=1,
+                max_size=32),
+       st.floats(0.1, 10.0))
+@settings(**SETTINGS)
+def test_clip_by_global_norm_invariant(xs, max_norm):
+    g = {"w": jnp.asarray(xs, jnp.float32)}
+    clipped, gnorm = clip_by_global_norm(g, max_norm)
+    new_norm = float(jnp.sqrt(jnp.sum(clipped["w"] ** 2)))
+    assert new_norm <= max_norm * 1.01 + 1e-5
+
+
+# ---------------------------------------------------------------------------
+# attention / softmax invariants
+# ---------------------------------------------------------------------------
+
+@given(s=st.integers(2, 24), d=st.sampled_from([8, 16]),
+       seed=st.integers(0, 50))
+@settings(**SETTINGS)
+def test_causal_attention_prefix_invariance(s, d, seed):
+    """Causal attention at position i ignores tokens > i: truncating the
+    suffix never changes earlier outputs."""
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((1, s, 2, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, s, 2, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, s, 2, d)), jnp.float32)
+    full = ref.flash_attention_ref(q, k, v, causal=True)
+    cut = s // 2
+    part = ref.flash_attention_ref(q[:, :cut], k[:, :cut], v[:, :cut],
+                                   causal=True)
+    np.testing.assert_allclose(np.asarray(full[:, :cut]),
+                               np.asarray(part), atol=1e-5, rtol=1e-5)
+
+
+@given(n=st.integers(1, 200), f=st.integers(1, 40),
+       k=st.integers(1, 30), seed=st.integers(0, 50))
+@settings(**SETTINGS)
+def test_kmeans_assignment_is_nearest(n, f, k, seed):
+    rng = np.random.default_rng(seed)
+    pts = jnp.asarray(rng.standard_normal((n, f)), jnp.float32)
+    cent = jnp.asarray(rng.standard_normal((k, f)), jnp.float32)
+    ids, dmin = ref.kmeans_assign_ref(pts, cent)
+    # brute-force check
+    d_all = np.linalg.norm(np.asarray(pts)[:, None] - np.asarray(cent),
+                           axis=-1)
+    np.testing.assert_allclose(np.asarray(dmin), d_all.min(1), atol=1e-3)
+    chosen = d_all[np.arange(n), np.asarray(ids)]
+    np.testing.assert_allclose(chosen, d_all.min(1), atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# placement invariants
+# ---------------------------------------------------------------------------
+
+@given(flops=st.floats(0, 1e15), nbytes=st.floats(0, 1e9))
+@settings(**SETTINGS)
+def test_placement_estimates_monotone(flops, nbytes):
+    """More flops or more bytes never decreases estimated time."""
+    from repro.core import ComputeResource, PilotManager
+    mgr = PilotManager()
+    p = mgr.submit_pilot(ComputeResource(tier="cloud", n_workers=2))
+    eng = PlacementEngine()
+    base = eng.estimate(TaskProfile(flops=flops, input_bytes=nbytes,
+                                    input_tier="edge"), p).est_time_s
+    more_f = eng.estimate(TaskProfile(flops=flops * 2 + 1,
+                                      input_bytes=nbytes,
+                                      input_tier="edge"), p).est_time_s
+    more_b = eng.estimate(TaskProfile(flops=flops,
+                                      input_bytes=nbytes * 2 + 1,
+                                      input_tier="edge"), p).est_time_s
+    assert more_f >= base - 1e-12
+    assert more_b >= base - 1e-12
+
+
+@given(st.sampled_from(["edge", "cloud", "hpc"]),
+       st.sampled_from(["edge", "cloud", "hpc"]))
+@settings(**SETTINGS)
+def test_link_model_symmetric(a, b):
+    la = link_between(a, b, DEFAULT_LINKS)
+    lb = link_between(b, a, DEFAULT_LINKS)
+    assert la == lb
+
+
+# ---------------------------------------------------------------------------
+# monitoring invariants
+# ---------------------------------------------------------------------------
+
+@given(st.lists(st.tuples(st.integers(0, 5), st.floats(0, 10)),
+                min_size=1, max_size=50))
+@settings(**SETTINGS)
+def test_metrics_latency_nonnegative(events):
+    reg = MetricsRegistry(clock=lambda: test_metrics_latency_nonnegative._t)
+    test_metrics_latency_nonnegative._t = 0.0
+    for msg_i, dt in events:
+        reg.stamp(f"m{msg_i}", "produced")
+        test_metrics_latency_nonnegative._t += abs(dt)
+        reg.stamp(f"m{msg_i}", "processed")
+    for lat in reg.latencies():
+        assert lat >= 0
+
+
+# ---------------------------------------------------------------------------
+# isolation-forest path length maths
+# ---------------------------------------------------------------------------
+
+@given(st.integers(2, 10_000))
+@settings(**SETTINGS)
+def test_iso_c_monotone(n):
+    assert float(iso_c(n + 1)) >= float(iso_c(n)) - 1e-5
+    assert float(iso_c(n)) > 0
+
+
+# ---------------------------------------------------------------------------
+# SSD invariants
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 30), s=st.sampled_from([16, 32]))
+@settings(max_examples=10, deadline=None)
+def test_ssd_prefix_causality(seed, s):
+    """SSD is causal: output at t depends only on inputs <= t."""
+    rng = np.random.default_rng(seed)
+    b, nh, hd, g, ds = 1, 2, 8, 1, 8
+    xh = jnp.asarray(rng.standard_normal((b, s, nh, hd)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.1, (b, s, nh)), jnp.float32)
+    A = -jnp.ones((nh,), jnp.float32)
+    B_ = jnp.asarray(rng.standard_normal((b, s, g, ds)), jnp.float32)
+    C_ = jnp.asarray(rng.standard_normal((b, s, g, ds)), jnp.float32)
+    D = jnp.zeros((nh,), jnp.float32)
+    y_full, _ = ref.ssd_ref(xh, dt, A, B_, C_, D)
+    cut = s // 2
+    y_half, _ = ref.ssd_ref(xh[:, :cut], dt[:, :cut], A, B_[:, :cut],
+                            C_[:, :cut], D)
+    np.testing.assert_allclose(np.asarray(y_full[:, :cut]),
+                               np.asarray(y_half), atol=1e-4, rtol=1e-4)

@@ -1,0 +1,66 @@
+"""Vocab-padding semantics: padded archs (minicpm3 73448→73472,
+hymba 32001→32128, mamba2 50280→50304) must train/serve exactly as if
+unpadded — pad logits are masked from the loss and never win argmax."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.configs.base import ArchConfig
+from repro.models import transformer as T
+
+
+def _padded_cfg():
+    """Tiny config with a deliberately unaligned vocab."""
+    base = get_arch("internlm2-1.8b").reduced()
+    return dataclasses.replace(base, vocab_size=251)   # pads to 256
+
+
+def test_padded_vocab_sizes():
+    assert get_arch("minicpm3-4b").padded_vocab_size == 73472
+    assert get_arch("hymba-1.5b").padded_vocab_size == 32128
+    assert get_arch("mamba2-130m").padded_vocab_size == 50304
+    assert get_arch("internlm2-1.8b").padded_vocab_size == 92544  # already
+
+
+def test_embed_and_head_padded_shapes():
+    cfg = _padded_cfg()
+    params = T.init_params(jax.random.key(0), cfg)
+    assert params["embed"].shape == (256, cfg.d_model)
+    assert params["head"].shape == (cfg.d_model, 256)
+    # pad rows/cols are zero
+    assert float(jnp.abs(params["embed"][251:]).sum()) == 0.0
+    assert float(jnp.abs(params["head"][:, 251:]).sum()) == 0.0
+
+
+def test_pad_logits_masked_from_loss_and_grad():
+    cfg = _padded_cfg()
+    params = T.init_params(jax.random.key(0), cfg)
+    inputs = {"tokens": jnp.ones((2, 16), jnp.int32) * 5,
+              "labels": jnp.ones((2, 16), jnp.int32) * 7}
+    grads, metrics = jax.grad(
+        lambda p: T.loss_fn(p, cfg, inputs), has_aux=True)(params)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    # no gradient flows into the pad columns of the head
+    assert float(jnp.abs(grads["head"][:, 251:]).sum()) == 0.0
+    # ... but real columns do get gradient
+    assert float(jnp.abs(grads["head"][:, :251]).sum()) > 0.0
+
+
+def test_loss_equals_unpadded_reference():
+    """Same weights, vocab 251 (padded to 256) vs a manual 251-logit CE."""
+    cfg = _padded_cfg()
+    params = T.init_params(jax.random.key(0), cfg)
+    inputs = {"tokens": jnp.arange(16, dtype=jnp.int32)[None] % 251,
+              "labels": (jnp.arange(16, dtype=jnp.int32)[None] + 1) % 251}
+    loss, _ = T.loss_fn(params, cfg, inputs)
+    logits, _ = T.forward(params, cfg, inputs)
+    lg = logits[..., :251].astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, -1)
+    gold = jnp.take_along_axis(lg, inputs["labels"][..., None],
+                               -1)[..., 0]
+    ref = (lse - gold).mean()
+    np.testing.assert_allclose(float(loss), float(ref), rtol=1e-5)
