@@ -1,0 +1,54 @@
+"""JAX API compatibility layer.
+
+The codebase targets the modern JAX surface (``jax.shard_map`` with
+``check_vma``/``axis_names``, ``jax.set_mesh``); CPU containers in CI pin
+older releases where those names live under ``jax.experimental`` or don't
+exist.  Route every use through this module so version drift is absorbed
+in exactly one place.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+              check_vma: Optional[bool] = None):
+    """``jax.shard_map`` when available, else the ``jax.experimental``
+    spelling.  ``check_vma`` maps onto the old ``check_rep``; the old API
+    treats every mesh axis as manual, so ``axis_names`` is meaningful only
+    on new JAX (all our meshes are single-axis, where the two agree)."""
+    if hasattr(jax, "shard_map"):
+        kw = {}
+        if axis_names is not None:
+            kw["axis_names"] = axis_names
+        if check_vma is not None:
+            kw["check_vma"] = check_vma
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=bool(check_vma) if check_vma is not None
+                      else True)
+
+
+def axis_size(axis_name):
+    """``jax.lax.axis_size`` when available; otherwise the classic
+    ``psum(1, axis)`` spelling (constant-folded by XLA)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+@contextlib.contextmanager
+def set_mesh(mesh):
+    """``jax.set_mesh`` when available; older releases use the Mesh
+    object's own context manager."""
+    if hasattr(jax, "set_mesh"):
+        with jax.set_mesh(mesh):
+            yield mesh
+    else:
+        with mesh:
+            yield mesh

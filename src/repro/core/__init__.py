@@ -23,8 +23,10 @@ from repro.core.pilot import (ComputeResource, Pilot, PilotError,
 from repro.core.placement import (LinkModel, PlacementDecision,
                                   PlacementEngine, TaskProfile)
 from repro.core.runtime import TaskContext, TaskFailed, TaskFuture, TaskRuntime
+from repro.sim.clock import SimClock, SystemClock, as_clock
 
 __all__ = [
+    "SimClock", "SystemClock", "as_clock",
     "Broker", "ConsumerGroup", "Message", "Topic", "WanShaper",
     "AutoScaler", "ScalePolicy", "remesh_restart",
     "EdgeToCloudPipeline", "PipelineResult",

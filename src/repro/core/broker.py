@@ -26,14 +26,13 @@ from __future__ import annotations
 import io
 import itertools
 import threading
-import time
-from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.monitoring import MetricsRegistry
+from repro.sim.clock import Clock, as_clock
 
 
 # ---------------------------------------------------------------------------
@@ -132,13 +131,23 @@ class Topic:
     def __init__(self, name: str, n_partitions: int,
                  metrics: MetricsRegistry,
                  shaper: Optional[WanShaper] = None,
-                 clock=time.monotonic):
+                 clock: Optional[Clock] = None):
         self.name = name
         self.partitions = [_Partition() for _ in range(n_partitions)]
         self.metrics = metrics
         self.shaper = shaper
-        self._clock = clock
+        self._clock = as_clock(clock)
         self._rr = itertools.count()
+
+    def _honor_visibility(self) -> bool:
+        """WAN-shaped visibility times are enforced when waiting for them
+        is free: either the shaper really sleeps (live demo) or the clock
+        is virtual (emulation, where time jumps to ``ready_at``).  With a
+        real clock and ``sleep=False`` the latency is accounted in the
+        metrics only — the seed's fast mode — so messages stay immediately
+        visible."""
+        return self.shaper is not None and (self.shaper.sleep
+                                            or self._clock.virtual)
 
     @property
     def n_partitions(self) -> int:
@@ -158,14 +167,14 @@ class Topic:
             else:
                 partition = next(self._rr) % self.n_partitions
         msg = Message(msg_id=msg_id, key=key, raw=raw, partition=partition)
-        now = self._clock()
+        now = self._clock.now()
         self.metrics.stamp(msg_id, "produced", bytes=msg.nbytes,
                            partition=partition)
         delay = 0.0
         if self.shaper is not None:
             delay = self.shaper.delay_for(msg.nbytes, now)
             if self.shaper.sleep and delay > 0:
-                time.sleep(delay)
+                self._clock.sleep(delay)
                 delay = 0.0
         self.partitions[partition].append(msg, now + delay)
         self.metrics.stamp(msg_id, "broker_in", wan_delay_s=delay)
@@ -179,31 +188,50 @@ class Topic:
              timeout_s: float = 1.0) -> Optional[Message]:
         """Blocking fetch of the message at ``offset`` in ``partition``.
         Honors WAN-shaped visibility times (a message 'in flight' across the
-        WAN is not yet visible)."""
+        WAN is not yet visible) whenever waiting for them is free — see
+        :meth:`_honor_visibility`."""
         part = self.partitions[partition]
-        deadline = time.monotonic() + timeout_s
+        honor = self._honor_visibility()
+        deadline = self._clock.now() + timeout_s
         with part.cond:
             while True:
+                now = self._clock.now()
                 if offset < len(part.log):
                     ready = part.ready_at[offset]
-                    if self.shaper is not None and not self.shaper.sleep:
-                        # virtual-time mode: visible immediately, latency is
-                        # accounted via the stamp below
-                        pass
-                    elif self._clock() < ready:
-                        part.cond.wait(timeout=min(
-                            ready - self._clock(),
-                            max(deadline - time.monotonic(), 0)))
+                    if honor and now < ready:
+                        if now >= deadline:
+                            return None
+                        self._clock.wait(part.cond,
+                                         min(ready - now, deadline - now))
                         continue
                     msg = part.log[offset]
                     self.metrics.stamp(
                         msg.msg_id, "broker_out",
                         visible_at=ready)
                     return msg
-                remaining = deadline - time.monotonic()
+                remaining = deadline - now
                 if remaining <= 0:
                     return None
-                part.cond.wait(timeout=remaining)
+                self._clock.wait(part.cond, remaining)
+
+    def poll_nowait(self, partition: int, offset: int
+                    ) -> Tuple[Optional[Message], Optional[float]]:
+        """Non-blocking fetch for event-driven consumers.  Returns
+        ``(message, None)`` when the message is visible now,
+        ``(None, ready_at)`` when it exists but is still crossing the WAN
+        (retry at ``ready_at``), and ``(None, None)`` when nothing has been
+        produced at this offset yet."""
+        part = self.partitions[partition]
+        honor = self._honor_visibility()
+        with part.cond:
+            if offset >= len(part.log):
+                return None, None
+            ready = part.ready_at[offset]
+            if honor and self._clock.now() < ready:
+                return None, ready
+            msg = part.log[offset]
+            self.metrics.stamp(msg.msg_id, "broker_out", visible_at=ready)
+            return msg, None
 
     def end_offsets(self) -> List[int]:
         return [len(p.log) for p in self.partitions]
@@ -221,6 +249,7 @@ class ConsumerGroup:
     def __init__(self, topic: Topic, group_id: str = "default"):
         self.topic = topic
         self.group_id = group_id
+        self._clock = topic._clock
         self._lock = threading.Lock()
         self.committed = [0] * topic.n_partitions
         self.members: List[str] = []
@@ -254,8 +283,8 @@ class ConsumerGroup:
              timeout_s: float = 1.0) -> Optional[Message]:
         """Fetch the next uncommitted message from any assigned partition."""
         parts = self.partitions_for(consumer_id)
-        deadline = time.monotonic() + timeout_s
-        while time.monotonic() < deadline or timeout_s == 0:
+        deadline = self._clock.now() + timeout_s
+        while self._clock.now() < deadline or timeout_s == 0:
             for p in parts:
                 with self._lock:
                     off = self.committed[p]
@@ -268,8 +297,28 @@ class ConsumerGroup:
                         return msg
             if timeout_s == 0:
                 return None
-            time.sleep(0.001)
+            self._clock.sleep(0.001)
         return None
+
+    def poll_nowait(self, consumer_id: str
+                    ) -> Tuple[Optional[Message], Optional[float]]:
+        """Event-driven fetch: the next uncommitted *visible* message from
+        any assigned partition, or ``(None, earliest_ready_at)`` when
+        everything pending is still crossing the WAN (``(None, None)`` when
+        nothing is pending at all)."""
+        next_ready: Optional[float] = None
+        for p in self.partitions_for(consumer_id):
+            with self._lock:
+                off = self.committed[p]
+            msg, ready = self.topic.poll_nowait(p, off)
+            if msg is not None:
+                self.topic.metrics.stamp(msg.msg_id, "consumed",
+                                         consumer=consumer_id)
+                return msg, None
+            if ready is not None:
+                next_ready = ready if next_ready is None \
+                    else min(next_ready, ready)
+        return None, next_ready
 
     def commit(self, msg: Message) -> None:
         with self._lock:
@@ -289,9 +338,9 @@ class Broker:
     Kafka binding is a drop-in."""
 
     def __init__(self, metrics: Optional[MetricsRegistry] = None,
-                 clock=time.monotonic):
-        self.metrics = metrics or MetricsRegistry()
-        self._clock = clock
+                 clock: Optional[Clock] = None):
+        self._clock = as_clock(clock)
+        self.metrics = metrics or MetricsRegistry(clock=self._clock)
         self._topics: Dict[str, Topic] = {}
         self._lock = threading.Lock()
 

@@ -20,12 +20,12 @@ Two mechanisms:
 from __future__ import annotations
 
 import threading
-import time
 from dataclasses import dataclass
 from typing import Callable, Optional
 
 from repro.core.monitoring import MetricsRegistry
 from repro.core.pilot import Pilot, PilotManager
+from repro.sim.clock import Clock, as_clock
 
 
 @dataclass
@@ -44,21 +44,25 @@ class AutoScaler:
                  lag_fn: Callable[[], int],
                  policy: Optional[ScalePolicy] = None,
                  metrics: Optional[MetricsRegistry] = None,
-                 interval_s: float = 0.2):
+                 interval_s: float = 0.2,
+                 clock: Optional[Clock] = None):
         self.manager = manager
         self.pilot = pilot
         self.lag_fn = lag_fn
         self.policy = policy or ScalePolicy()
-        self.metrics = metrics or MetricsRegistry()
+        self._clock = as_clock(clock)
+        self.metrics = metrics or MetricsRegistry(clock=self._clock)
         self.interval_s = interval_s
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
-        self._last_action = 0.0
+        # cooldowns measured on the injected clock; emulated scenarios can
+        # step through hours of scaling decisions in zero wall time
+        self._last_action = -float("inf")
 
     def step_once(self) -> Optional[int]:
         """One scaling decision; returns the new worker count if changed."""
         lag = self.lag_fn()
-        now = time.monotonic()
+        now = self._clock.now()
         if now - self._last_action < self.policy.cooldown_s:
             return None
         workers = self.pilot.resource.n_workers

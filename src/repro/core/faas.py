@@ -29,8 +29,8 @@ while the pipeline runs.
 """
 from __future__ import annotations
 
+import itertools
 import threading
-import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
 
@@ -42,9 +42,12 @@ from repro.core.params_service import ParameterService
 from repro.core.pilot import Pilot
 from repro.core.placement import PlacementEngine, TaskProfile
 from repro.core.runtime import TaskContext, TaskRuntime
+from repro.sim.clock import Clock, as_clock
 
 ProduceFn = Callable[[TaskContext], Any]
 ProcessFn = Callable[..., Any]
+
+_run_ids = itertools.count()
 
 
 @dataclass
@@ -89,12 +92,25 @@ class EdgeToCloudPipeline:
                  metrics: Optional[MetricsRegistry] = None,
                  max_retries: int = 2,
                  speculative_factor: float = 0.0,
-                 heartbeat_timeout_s: float = 30.0):
+                 heartbeat_timeout_s: float = 30.0,
+                 clock: Optional[Clock] = None):
         self.pilot_edge = pilot_edge
         self.pilot_cloud = pilot_cloud_processing
         self.pilot_broker = pilot_cloud_broker or pilot_cloud_processing
-        self.metrics = metrics or MetricsRegistry()
-        self.broker = broker or Broker(metrics=self.metrics)
+        self._clock = as_clock(clock)
+        if getattr(self._clock, "auto_advance", False):
+            # the threaded run loop cannot coordinate on fast-forward time:
+            # concurrent waiters would race the shared clock past the run
+            # deadline while work is still in flight. Use a manually-driven
+            # SimClock here, or the single-threaded DES harness
+            # (repro.sim.scenarios) for fully virtual pipeline runs.
+            raise ValueError(
+                "EdgeToCloudPipeline needs a wall clock or a manually "
+                "driven SimClock(auto_advance=False); for auto-advance "
+                "virtual time use repro.sim.scenarios.run_scenario")
+        self.metrics = metrics or MetricsRegistry(clock=self._clock)
+        self.broker = broker or Broker(metrics=self.metrics,
+                                       clock=self._clock)
         self.params = parameter_service or ParameterService(
             metrics=self.metrics)
         self.n_edge_devices = (n_edge_devices
@@ -117,7 +133,8 @@ class EdgeToCloudPipeline:
         self.cloud_consumers = cloud_consumers or self.n_partitions
         self._runtime_kw = dict(max_retries=max_retries,
                                 speculative_factor=speculative_factor,
-                                heartbeat_timeout_s=heartbeat_timeout_s)
+                                heartbeat_timeout_s=heartbeat_timeout_s,
+                                clock=self._clock)
         self._topic: Optional[Topic] = None
         self._stop = threading.Event()
 
@@ -155,10 +172,12 @@ class EdgeToCloudPipeline:
             timeout_s: float = 600.0,
             collect_results: bool = True) -> PipelineResult:
         """Drive ``n_messages`` end-to-end (the paper sends 512 per run)."""
-        t0 = time.monotonic()
+        t0 = self._clock.now()
         self._stop.clear()
+        # run-counter suffix, not a wall-time suffix: virtual runs restart
+        # the clock at 0 and must not collide on topic names
         topic = self.broker.create_topic(
-            f"{self.topic_name}-{int(t0 * 1e6) % 10**9}",
+            f"{self.topic_name}-{next(_run_ids)}",
             n_partitions=self.n_partitions, shaper=self.wan_shaper)
         self._topic = topic
 
@@ -201,15 +220,15 @@ class EdgeToCloudPipeline:
         def cloud_consumer(ctx: TaskContext, consumer_idx: int):
             cid = f"consumer-{consumer_idx}"
             group.join(cid)
-            idle_deadline = time.monotonic() + timeout_s
+            idle_deadline = self._clock.now() + timeout_s
             while not self._stop.is_set():
                 msg = group.poll(cid, timeout_s=0.2)
                 if msg is None:
                     if (n_processed[0] >= n_messages
-                            or time.monotonic() > idle_deadline):
+                            or self._clock.now() > idle_deadline):
                         return
                     continue
-                idle_deadline = time.monotonic() + timeout_s
+                idle_deadline = self._clock.now() + timeout_s
                 with results_lock:
                     dup = msg.msg_id in seen_ids
                     seen_ids.add(msg.msg_id)     # reserve
@@ -243,20 +262,39 @@ class EdgeToCloudPipeline:
             for i in range(self.cloud_consumers)]
 
         # --- wait for completion ---
-        deadline = time.monotonic() + timeout_s
-        for _ in range(n_messages):
-            if not processed.acquire(timeout=max(deadline - time.monotonic(),
-                                                 0.01)):
+        # the semaphore wait is real (worker threads are real) but the
+        # deadline is measured on the injected clock; with a virtual clock
+        # the real wait must stay short so deadline advances (driven from
+        # another thread) are observed promptly
+        deadline = self._clock.now() + timeout_s
+        remaining = n_messages
+        while remaining > 0:
+            wait_s = min(deadline - self._clock.now(), timeout_s)
+            if self._clock.virtual:
+                wait_s = min(wait_s, 0.05)
+            if processed.acquire(timeout=max(wait_s, 0.01)):
+                remaining -= 1
+            elif self._clock.now() >= deadline:
                 break
         self._stop.set()
+        wall = self._clock.now() - t0       # before any shutdown nudging
         for f in producer_futs + consumer_futs:
-            try:
-                f.result(timeout=10.0)
-            except Exception:   # noqa: BLE001 — per-task errors already counted
-                pass
+            # with a manual virtual clock, workers may be parked inside
+            # clock.sleep waiting for time the external driver will never
+            # provide once the run is over — tick the clock while joining
+            # so their poll loops observe _stop and exit
+            for _ in range(1000):           # ~10 s real bound per future
+                if self._clock.virtual:
+                    self._clock.advance(0.01)
+                try:
+                    f.result(timeout=0.01)
+                    break
+                except TimeoutError:
+                    continue
+                except Exception:   # noqa: BLE001 — task errors already counted
+                    break
         edge_rt.shutdown(wait=False)
         cloud_rt.shutdown(wait=False)
-        wall = time.monotonic() - t0
         n_prod = int(self.metrics.counter(
             f"topic.{topic.name}.msgs_in"))
         return PipelineResult(results=results, metrics=self.metrics,

@@ -19,10 +19,11 @@ from __future__ import annotations
 
 import statistics
 import threading
-import time
 from collections import defaultdict
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
+
+from repro.sim.clock import as_clock
 
 
 @dataclass
@@ -51,8 +52,10 @@ class MetricsRegistry:
     tracked").
     """
 
-    def __init__(self, clock=time.monotonic):
-        self._clock = clock
+    def __init__(self, clock=None):
+        # accepts a Clock object, a bare now() callable (seed API), or None
+        self.clock = as_clock(clock)
+        self._clock = self.clock.now
         self._lock = threading.Lock()
         self._traces: Dict[str, MessageTrace] = {}
         self._counters: Dict[str, float] = defaultdict(float)
@@ -118,6 +121,20 @@ class MetricsRegistry:
             "p95_s": lat[min(n - 1, int(0.95 * n))],
             "max_s": lat[-1],
         }
+
+    def first_stamp(self, event: str) -> Optional[float]:
+        """Earliest timestamp of ``event`` across all traces."""
+        with self._lock:
+            ts = [tr.stamps[event] for tr in self._traces.values()
+                  if event in tr.stamps]
+        return min(ts) if ts else None
+
+    def last_stamp(self, event: str) -> Optional[float]:
+        """Latest timestamp of ``event`` across all traces."""
+        with self._lock:
+            ts = [tr.stamps[event] for tr in self._traces.values()
+                  if event in tr.stamps]
+        return max(ts) if ts else None
 
     def throughput(self, event: str = "processed") -> Dict[str, float]:
         """Messages/s and bytes/s over the observed window of ``event``."""

@@ -33,6 +33,8 @@ from typing import Callable, Dict, List, Optional, Sequence
 import jax
 import numpy as np
 
+from repro.sim.clock import Clock, as_clock
+
 TIERS = ("edge", "cloud", "hpc")
 
 
@@ -122,12 +124,17 @@ class PilotManager:
     pilots *after* acquisition.
     """
 
-    def __init__(self, devices: Optional[Sequence] = None):
+    def __init__(self, devices: Optional[Sequence] = None,
+                 clock: Optional[Clock] = None,
+                 heartbeat_timeout_s: float = 30.0):
         self._lock = threading.Lock()
+        self._clock = as_clock(clock)
+        self.heartbeat_timeout_s = heartbeat_timeout_s
         self._all_devices = tuple(devices if devices is not None
                                   else jax.devices())
         self._free = list(self._all_devices)
         self._pilots: Dict[str, Pilot] = {}
+        self._heartbeats: Dict[str, float] = {}
 
     # -- inventory ---------------------------------------------------------
 
@@ -166,7 +173,40 @@ class PilotManager:
             pilot = Pilot(pilot_id=pid, resource=resource,
                           devices=devices, mesh=mesh)
             self._pilots[pid] = pilot
+            self._heartbeats[pid] = self._clock.now()
             return pilot
+
+    # -- liveness ------------------------------------------------------------
+
+    def heartbeat(self, pilot: Pilot) -> None:
+        """Pilot liveness beat (the paper's failure detection across the
+        continuum); stamped on the injected clock so emulated scenarios can
+        schedule silent node loss."""
+        with self._lock:
+            self._heartbeats[pilot.pilot_id] = self._clock.now()
+
+    def last_heartbeat(self, pilot: Pilot) -> Optional[float]:
+        with self._lock:
+            return self._heartbeats.get(pilot.pilot_id)
+
+    def check_liveness(self,
+                       timeout_s: Optional[float] = None) -> List[Pilot]:
+        """Mark active pilots whose last beat is older than the timeout as
+        failed (their devices are gone — a node loss, not a release).
+        Returns the newly failed pilots."""
+        timeout = (self.heartbeat_timeout_s
+                   if timeout_s is None else timeout_s)
+        now = self._clock.now()
+        lost: List[Pilot] = []
+        with self._lock:
+            for pid, p in self._pilots.items():
+                if p.state != "active":
+                    continue
+                beat = self._heartbeats.get(pid)
+                if beat is not None and now - beat > timeout:
+                    p.fail()
+                    lost.append(p)
+        return lost
 
     @staticmethod
     def _make_mesh(devices: tuple, resource: ComputeResource):

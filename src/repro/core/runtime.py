@@ -24,7 +24,6 @@ from __future__ import annotations
 import itertools
 import statistics
 import threading
-import time
 import traceback
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
@@ -32,6 +31,7 @@ from typing import Any, Callable, Dict, List, Optional
 
 from repro.core.monitoring import MetricsRegistry
 from repro.core.pilot import Pilot
+from repro.sim.clock import Clock, as_clock
 
 _task_ids = itertools.count()
 
@@ -42,12 +42,15 @@ class TaskFailed(RuntimeError):
 
 @dataclass
 class TaskContext:
-    """Paper's context object: topology + shared state + heartbeat hook."""
+    """Paper's context object: topology + shared state + heartbeat hook.
+    ``clock`` is the runtime's injected clock — long-running tasks should
+    wait through it (``ctx.clock.sleep``) so emulated runs stay virtual."""
     pilot_id: str
     tier: str
     task_id: str
     attempt: int
     shared: dict = field(default_factory=dict)
+    clock: Optional[Clock] = None
     _heartbeat: Optional[Callable[[], None]] = None
 
     def heartbeat(self) -> None:
@@ -106,9 +109,11 @@ class TaskRuntime:
                  *, max_retries: int = 2,
                  heartbeat_timeout_s: float = 30.0,
                  speculative_factor: float = 0.0,
-                 monitor_interval_s: float = 0.05):
+                 monitor_interval_s: float = 0.05,
+                 clock: Optional[Clock] = None):
         self.pilot = pilot
-        self.metrics = metrics or MetricsRegistry()
+        self._clock = as_clock(clock)
+        self.metrics = metrics or MetricsRegistry(clock=self._clock)
         self.max_retries = max_retries
         self.heartbeat_timeout_s = heartbeat_timeout_s
         self.speculative_factor = speculative_factor
@@ -158,7 +163,7 @@ class TaskRuntime:
         fut: TaskFuture = rec["future"]
         attempt_no = fut.attempts
         fut.attempts += 1
-        now = time.monotonic()
+        now = self._clock.now()
         att = _Attempt(attempt_id=attempt_no, started=now, last_beat=now)
         with self._lock:
             rec["attempts"][attempt_no] = att
@@ -170,6 +175,7 @@ class TaskRuntime:
             ctx = TaskContext(
                 pilot_id=self.pilot.pilot_id, tier=self.pilot.tier,
                 task_id=task_id, attempt=attempt_no, shared=self._shared,
+                clock=self._clock,
                 _heartbeat=lambda: self._beat(att))
             try:
                 result = rec["fn"](ctx, *rec["args"], **rec["kwargs"])
@@ -178,7 +184,7 @@ class TaskRuntime:
                 self._on_attempt_error(task_id, rec, e)
                 return
             att.done = True
-            dur = time.monotonic() - att.started
+            dur = self._clock.now() - att.started
             with self._lock:
                 self._durations.append(dur)
                 if len(self._durations) > 256:
@@ -191,7 +197,7 @@ class TaskRuntime:
         self._pool.submit(run)
 
     def _beat(self, att: _Attempt) -> None:
-        att.last_beat = time.monotonic()
+        att.last_beat = self._clock.now()
 
     def _on_attempt_error(self, task_id: str, rec: dict,
                           err: BaseException) -> None:
@@ -205,7 +211,7 @@ class TaskRuntime:
         if retries > 0 and not fut.done():
             self.metrics.incr("runtime.retries")
             delay = 0.01 * (2 ** (self.max_retries - retries))
-            time.sleep(delay)
+            self._clock.sleep(delay)
             if not fut.done():
                 self._launch_attempt(task_id, rec)
         else:
@@ -224,8 +230,11 @@ class TaskRuntime:
             return statistics.median(self._durations)
 
     def _monitor_loop(self, interval: float) -> None:
+        # the monitor thread wakes on a *real* cadence (it must stay live
+        # while virtual time is driven from outside) but reads *clock*
+        # time, so heartbeat loss / stragglers trigger on virtual advances
         while not self._shutdown.wait(interval):
-            now = time.monotonic()
+            now = self._clock.now()
             median = self._median_duration()
             with self._lock:
                 snapshot = list(self._inflight.items())

@@ -1,0 +1,40 @@
+"""Deterministic virtual-time emulation for the edge-to-cloud continuum.
+
+The paper's companion work (*Exploring Task Placement for Edge-to-Cloud
+Applications using Emulation*, arXiv 2104.03368) argues the placement
+trade-off space — model complexity × WAN band × partition layout ×
+failure schedule — is only explorable at scale through emulation.  This
+package provides the three pieces that make that possible here:
+
+* :mod:`repro.sim.clock` — the injected-clock API.  :class:`SimClock` is a
+  virtual clock; :class:`SystemClock` is the wall-clock default.  Every
+  core layer (broker, runtime, pilot liveness, autoscaler, monitoring,
+  pipeline) takes a ``clock=`` and never calls ``time.*`` directly.
+* :mod:`repro.sim.scheduler` — :class:`EventScheduler`, a classic
+  discrete-event loop over the virtual clock with deterministic
+  (time, insertion-order) event ordering.
+* :mod:`repro.sim.scenarios` — the Fig-3 scenario harness: geo-distributed
+  pipeline runs (k-means / autoencoder × edge / cloud / hybrid placement ×
+  WAN bands × failure schedules) replayed in milliseconds of wall time
+  with bit-reproducible metrics.
+
+``scenarios`` is re-exported lazily (PEP 562) because it imports
+``repro.core`` which itself imports :mod:`repro.sim.clock`.
+"""
+from repro.sim.clock import (SYSTEM_CLOCK, Clock, SimClock, SystemClock,
+                             as_clock)
+from repro.sim.scheduler import EventScheduler
+
+_SCENARIO_NAMES = ("ModelSpec", "Scenario", "ScenarioResult", "FailureSpec",
+                   "WAN_BANDS", "KMEANS", "AUTOENCODER", "MODELS",
+                   "PLACEMENTS", "run_scenario", "sweep", "format_table")
+
+__all__ = ["Clock", "SystemClock", "SimClock", "SYSTEM_CLOCK", "as_clock",
+           "EventScheduler", *_SCENARIO_NAMES]
+
+
+def __getattr__(name):
+    if name in _SCENARIO_NAMES:
+        from repro.sim import scenarios
+        return getattr(scenarios, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

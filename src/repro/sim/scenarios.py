@@ -1,0 +1,379 @@
+"""Fig-3 scenario harness: emulated edge-to-cloud pipeline runs.
+
+Replays a full geo-distributed pipeline — Mini-App producers on edge
+devices, the partitioned broker with a WAN-shaped intercontinental hop,
+consumer-group processing on the chosen tier, consumer crashes and
+rebalances — as a single-threaded discrete-event simulation over
+:class:`~repro.sim.clock.SimClock`.  The *real* framework objects carry the
+dataflow (``Broker``/``Topic``/``ConsumerGroup``/``WanShaper``/
+``MetricsRegistry``), so broker offsets, at-least-once redelivery, byte
+accounting and linked metrics are the production code paths, only time is
+virtual.  A sweep of {model} × {placement} × {WAN band} that takes hours
+of real pipeline time (paper Fig 2/3) replays in milliseconds with
+bit-reproducible metrics.
+
+Placement modalities (the paper's deployment modalities, §II-C):
+
+* ``cloud``  — raw points cross the WAN; the model runs on the cloud tier.
+* ``edge``   — the model runs next to the generator; only the (small)
+  model output crosses the WAN.
+* ``hybrid`` — an edge pre-aggregation stage shrinks each message by
+  ``hybrid_reduce`` before the WAN hop; the model finishes on the cloud.
+
+Cost model: compute time = task FLOPs / tier FLOP/s with the same
+``EDGE_FLOPS`` / ``DEVICE_FLOPS`` constants the :class:`PlacementEngine`
+prices placements with, so emulated throughput and the engine's
+``compare_tiers`` estimates are mutually consistent (tested in
+``tests/test_sim.py``).
+"""
+from __future__ import annotations
+
+import time as _walltime
+from dataclasses import dataclass, field, replace
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.broker import Broker, ConsumerGroup, WanShaper
+from repro.core.monitoring import MetricsRegistry
+from repro.core.placement import (DEVICE_FLOPS, EDGE_FLOPS, LinkModel,
+                                  PlacementEngine, TaskProfile)
+from repro.ml.datagen import N_FEATURES, message_nbytes
+from repro.sim.clock import SimClock
+from repro.sim.scheduler import EventScheduler
+
+# the paper's iPerf band plus the constrained 10 Mbit/s point used for the
+# placement-sensitivity experiments; (bandwidth bits/s, RTT seconds)
+WAN_BANDS: Dict[str, Tuple[float, float]] = {
+    "10mbit": (10e6, 0.150),
+    "50mbit": (50e6, 0.150),
+    "100mbit": (100e6, 0.140),
+}
+
+PLACEMENTS = ("edge", "cloud", "hybrid")
+
+
+@dataclass(frozen=True)
+class ModelSpec:
+    """Analytic cost of one processing model, per data point."""
+    name: str
+    flops_per_point: float          # full model cost
+    output_bytes: int               # serialized model output per message
+    hybrid_reduce: int = 10         # edge pre-aggregation shrink factor
+    preprocess_flops_per_point: float = 200.0
+
+    def task_profile(self, n_points: int) -> TaskProfile:
+        """The what-the-placement-engine-sees view of one message."""
+        return TaskProfile(
+            flops=self.flops_per_point * n_points,
+            input_bytes=float(message_nbytes(n_points)),
+            input_tier="edge",
+            output_bytes=float(self.output_bytes),
+            output_tier="cloud")
+
+
+# k-means assignment+update: ~2·k·d FLOPs/point × a handful of Lloyd
+# iterations — cheap per byte, i.e. transfer-bound (paper Fig 3 left).
+KMEANS = ModelSpec("kmeans", flops_per_point=8_000.0,
+                   output_bytes=25 * N_FEATURES * 8)
+# autoencoder minibatch training: forward+backward over the dense stack ×
+# epochs — expensive per byte, i.e. compute-bound (paper Fig 3 right):
+# even the 10 Mbit/s link feeds points faster than the cloud tier trains
+# on them, so placement is WAN-insensitive.
+AUTOENCODER = ModelSpec("autoencoder", flops_per_point=6e7,
+                        output_bytes=2_048)
+MODELS: Dict[str, ModelSpec] = {m.name: m for m in (KMEANS, AUTOENCODER)}
+
+
+@dataclass(frozen=True)
+class FailureSpec:
+    """Crash consumer ``consumer_idx`` at virtual time ``at_s``; a
+    replacement (fresh member id, resuming from committed offsets) joins
+    ``restart_after_s`` later unless None."""
+    at_s: float
+    consumer_idx: int = 0
+    restart_after_s: Optional[float] = 1.0
+
+
+@dataclass(frozen=True)
+class Scenario:
+    model: ModelSpec = KMEANS
+    placement: str = "cloud"                  # edge | cloud | hybrid
+    wan_band: str = "100mbit"                 # key into WAN_BANDS
+    n_messages: int = 64
+    n_devices: int = 4                        # edge devices == partitions
+    n_consumers: Optional[int] = None         # default: n_devices
+    n_points: int = 2_500                     # points per message
+    gen_s_per_point: float = 2e-6             # Mini-App generation cost
+    failures: Tuple[FailureSpec, ...] = ()
+    seed: int = 0
+    t_max_s: float = 36_000.0                 # virtual-time safety cap
+
+    def label(self) -> str:
+        return (f"{self.model.name}/{self.placement}/{self.wan_band}"
+                f"{'/fail' if self.failures else ''}")
+
+
+@dataclass
+class ScenarioResult:
+    scenario: Scenario
+    n_processed: int
+    n_duplicates: int
+    makespan_s: float                 # virtual seconds, first gen → last done
+    throughput_msgs_s: float
+    latency_mean_s: float
+    latency_p95_s: float
+    wan_mbytes: float
+    placement_estimates: Dict[str, float]     # PlacementEngine per-tier est.
+    wall_ms: float = 0.0              # real milliseconds spent emulating
+    metrics: MetricsRegistry = field(default=None, repr=False)
+
+    def row(self) -> Dict[str, object]:
+        """Deterministic summary — identical across runs at the same seed
+        (``wall_ms`` is wall time and deliberately excluded)."""
+        s = self.scenario
+        return {
+            "model": s.model.name, "placement": s.placement,
+            "wan": s.wan_band, "messages": s.n_messages,
+            "processed": self.n_processed, "dups": self.n_duplicates,
+            "makespan_s": self.makespan_s,
+            "msgs_per_s": self.throughput_msgs_s,
+            "lat_mean_s": self.latency_mean_s,
+            "lat_p95_s": self.latency_p95_s,
+            "wan_mb": self.wan_mbytes,
+        }
+
+
+def _edge_compute_s(sc: Scenario) -> float:
+    """Per-message edge-stage service time for the scenario's placement."""
+    m = sc.model
+    if sc.placement == "edge":
+        return m.flops_per_point * sc.n_points / EDGE_FLOPS
+    if sc.placement == "hybrid":
+        return m.preprocess_flops_per_point * sc.n_points / EDGE_FLOPS
+    return 0.0
+
+
+def _cloud_compute_s(sc: Scenario) -> float:
+    """Per-message cloud-stage service time (one consumer slot)."""
+    m = sc.model
+    if sc.placement == "edge":
+        # results only need ingesting/merging on the cloud side
+        return m.output_bytes / 8 * 50.0 / DEVICE_FLOPS
+    points = sc.n_points if sc.placement == "cloud" \
+        else max(sc.n_points // m.hybrid_reduce, 1)
+    return m.flops_per_point * points / DEVICE_FLOPS
+
+
+def _payload(sc: Scenario) -> np.ndarray:
+    """What actually crosses the broker for this placement (real numpy
+    serialization, so WAN byte accounting is exact)."""
+    if sc.placement == "edge":
+        return np.zeros(max(sc.model.output_bytes // 8, 1), np.float64)
+    if sc.placement == "hybrid":
+        return np.zeros((max(sc.n_points // sc.model.hybrid_reduce, 1),
+                         N_FEATURES), np.float64)
+    return np.zeros((sc.n_points, N_FEATURES), np.float64)
+
+
+def placement_estimates(sc: Scenario) -> Dict[str, float]:
+    """PlacementEngine per-tier completion-time estimates for one message
+    of this scenario, priced over this scenario's WAN band."""
+    from repro.core.pilot import ComputeResource, PilotManager
+    bw_bps, rtt = WAN_BANDS[sc.wan_band]
+    links = {("edge", "cloud"): LinkModel(bandwidth=bw_bps / 8.0,
+                                          latency_s=rtt),
+             ("edge", "hpc"): LinkModel(bandwidth=bw_bps / 8.0,
+                                        latency_s=rtt)}
+    eng = PlacementEngine(links=links)
+    mgr = PilotManager(devices=())
+    edge = mgr.submit_pilot(ComputeResource(tier="edge",
+                                            n_workers=sc.n_devices))
+    n_cons = sc.n_consumers or sc.n_devices
+    cloud = mgr.submit_pilot(ComputeResource(tier="cloud",
+                                             n_workers=n_cons))
+    return eng.compare_tiers(sc.model.task_profile(sc.n_points),
+                             [edge, cloud])
+
+
+class _Sim:
+    """One scenario's event-driven pipeline state."""
+
+    def __init__(self, sc: Scenario):
+        if sc.wan_band not in WAN_BANDS:
+            raise ValueError(f"unknown wan_band {sc.wan_band!r}; "
+                             f"known: {sorted(WAN_BANDS)}")
+        self.sc = sc
+        self.clock = SimClock()
+        self.sched = EventScheduler(self.clock)
+        self.metrics = MetricsRegistry(clock=self.clock)
+        self.broker = Broker(metrics=self.metrics, clock=self.clock)
+        bw_bps, rtt = WAN_BANDS[sc.wan_band]
+        self.shaper = WanShaper(bandwidth_bps=bw_bps, rtt_s=rtt, sleep=False)
+        self.topic = self.broker.create_topic(
+            "e2c", n_partitions=sc.n_devices, shaper=self.shaper)
+        self.group = ConsumerGroup(self.topic, "cloud-processing")
+        self.rng = np.random.default_rng(sc.seed)
+        self.n_consumers = sc.n_consumers or sc.n_devices
+        self.alive: Dict[str, bool] = {}
+        self.produced = 0
+        self.seen_ids: set = set()
+        self.duplicates = 0
+        self.done = False
+        self.t_edge = _edge_compute_s(sc)
+        self.t_cloud = _cloud_compute_s(sc)
+        self.gen_s = sc.gen_s_per_point * sc.n_points
+        # per-device message budget (paper: messages split across devices)
+        base, extra = divmod(sc.n_messages, sc.n_devices)
+        self.per_device = [base + (1 if i < extra else 0)
+                           for i in range(sc.n_devices)]
+
+    # -- edge side ---------------------------------------------------------
+
+    def start(self) -> None:
+        for d in range(self.sc.n_devices):
+            if self.per_device[d]:
+                # deterministic per-device phase offset (devices don't boot
+                # in lockstep); drawn in device order from the seeded rng
+                offset = float(self.rng.uniform(0.0, self.gen_s + 1e-9))
+                self.sched.at(offset, lambda d=d: self._device_step(d))
+        for c in range(self.n_consumers):
+            cid = f"consumer-{c}"
+            self.alive[cid] = True
+            self.group.join(cid)
+            self.sched.at(0.0, lambda cid=cid: self._consumer_poll(cid))
+        for f in self.sc.failures:
+            self.sched.at(f.at_s, lambda f=f: self._crash(f))
+
+    def _device_step(self, d: int) -> None:
+        if self.per_device[d] <= 0 or self.done:
+            return
+        # generate, run the edge stage, then hand to the broker
+        self.sched.after(self.gen_s + self.t_edge,
+                         lambda: self._device_produce(d))
+
+    def _device_produce(self, d: int) -> None:
+        if self.done:
+            return
+        self.per_device[d] -= 1
+        self.produced += 1
+        self.topic.produce(_payload(self.sc), partition=d)
+        self._device_step(d)
+
+    # -- cloud side --------------------------------------------------------
+
+    def _consumer_poll(self, cid: str) -> None:
+        if self.done or not self.alive.get(cid, False):
+            return
+        msg, ready = self.group.poll_nowait(cid)
+        if msg is None:
+            now = self.clock.now()
+            # in-flight WAN messages have an exact wakeup; otherwise idle-
+            # tick (coarse is fine: a streaming consumer re-polls straight
+            # from _consumer_done, never through this path)
+            retry = ready if ready is not None else now + 0.05
+            self.sched.at(max(retry, now), lambda: self._consumer_poll(cid))
+            return
+        self.sched.after(self.t_cloud,
+                         lambda: self._consumer_done(cid, msg))
+
+    def _consumer_done(self, cid: str, msg) -> None:
+        if not self.alive.get(cid, False):
+            return                      # crashed mid-service: no commit
+        self.group.commit(msg)
+        if msg.msg_id in self.seen_ids:
+            self.duplicates += 1
+            self.metrics.incr("sim.duplicates")
+        else:
+            self.seen_ids.add(msg.msg_id)
+            self.metrics.stamp(msg.msg_id, "processed", bytes=msg.nbytes)
+        if (len(self.seen_ids) >= self.sc.n_messages
+                and self.produced >= self.sc.n_messages):
+            self.done = True
+            return
+        self._consumer_poll(cid)
+
+    # -- failures ----------------------------------------------------------
+
+    def _crash(self, f: FailureSpec) -> None:
+        cid = f"consumer-{f.consumer_idx}"
+        if not self.alive.get(cid, False):
+            return
+        self.alive[cid] = False
+        self.group.leave(cid)           # rebalance; uncommitted redeliver
+        self.metrics.event("consumer_crashed", consumer=cid)
+        if f.restart_after_s is not None:
+            new_cid = f"{cid}-r"
+            self.sched.after(f.restart_after_s,
+                             lambda: self._restart(new_cid))
+
+    def _restart(self, cid: str) -> None:
+        self.alive[cid] = True
+        self.group.join(cid)
+        self.metrics.event("consumer_restarted", consumer=cid)
+        self._consumer_poll(cid)
+
+
+def run_scenario(sc: Scenario) -> ScenarioResult:
+    """Emulate one scenario to completion; returns deterministic metrics."""
+    if sc.placement not in PLACEMENTS:
+        raise ValueError(f"placement must be one of {PLACEMENTS}")
+    t_wall = _walltime.perf_counter()
+    sim = _Sim(sc)
+    sim.start()
+    sim.sched.run(until=sc.t_max_s, max_events=5_000_000)
+
+    lat = sim.metrics.latencies("produced", "processed")
+    lat.sort()
+    first = sim.metrics.first_stamp("produced") or 0.0
+    last = sim.metrics.last_stamp("processed") or 0.0
+    makespan = max(last - first, 1e-9)
+    n_done = len(sim.seen_ids)
+    return ScenarioResult(
+        scenario=sc,
+        n_processed=n_done,
+        n_duplicates=sim.duplicates,
+        makespan_s=makespan,
+        throughput_msgs_s=n_done / makespan,
+        latency_mean_s=float(np.mean(lat)) if lat else 0.0,
+        latency_p95_s=lat[min(len(lat) - 1, int(0.95 * len(lat)))]
+        if lat else 0.0,
+        wan_mbytes=sim.metrics.counter("topic.e2c.bytes_in") / 1e6,
+        placement_estimates=placement_estimates(sc),
+        wall_ms=(_walltime.perf_counter() - t_wall) * 1e3,
+        metrics=sim.metrics)
+
+
+def sweep(models: Sequence[ModelSpec] = (KMEANS, AUTOENCODER),
+          placements: Sequence[str] = PLACEMENTS,
+          bands: Sequence[str] = ("10mbit", "50mbit", "100mbit"),
+          *, n_messages: int = 64, n_devices: int = 4,
+          n_points: int = 2_500, seed: int = 0,
+          failures: Tuple[FailureSpec, ...] = ()) -> List[ScenarioResult]:
+    """The Fig-3 grid: {models} × {placements} × {WAN bands}."""
+    out = []
+    for m in models:
+        for p in placements:
+            for b in bands:
+                out.append(run_scenario(Scenario(
+                    model=m, placement=p, wan_band=b,
+                    n_messages=n_messages, n_devices=n_devices,
+                    n_points=n_points, seed=seed, failures=failures)))
+    return out
+
+
+def format_table(results: Sequence[ScenarioResult]) -> str:
+    """The paper's throughput/latency trade-off table."""
+    hdr = (f"{'model':>12} {'placement':>9} {'wan':>8} {'done':>5} "
+           f"{'dups':>4} {'msg/s':>9} {'lat-mean s':>10} {'lat-p95 s':>9} "
+           f"{'WAN MB':>8} {'wall ms':>8}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in results:
+        s = r.scenario
+        lines.append(
+            f"{s.model.name:>12} {s.placement:>9} {s.wan_band:>8} "
+            f"{r.n_processed:>5} {r.n_duplicates:>4} "
+            f"{r.throughput_msgs_s:>9.3f} {r.latency_mean_s:>10.3f} "
+            f"{r.latency_p95_s:>9.3f} {r.wan_mbytes:>8.2f} "
+            f"{r.wall_ms:>8.1f}")
+    return "\n".join(lines)

@@ -10,8 +10,18 @@ import pytest
 from repro.core import (AutoScaler, Broker, ComputeResource, ConsumerGroup,
                         EdgeToCloudPipeline, MetricsRegistry,
                         ParameterService, Pilot, PilotError, PilotManager,
-                        PlacementEngine, ScalePolicy, TaskFailed,
+                        PlacementEngine, ScalePolicy, SimClock, TaskFailed,
                         TaskProfile, TaskRuntime, WanShaper, remesh_restart)
+
+
+def _drive(clock, fut, step_s=0.5, timeout_s=10.0):
+    """Advance virtual time in steps until the future resolves — the test
+    plays the role of the (virtual) passage of time."""
+    deadline = time.monotonic() + timeout_s
+    while not fut.done() and time.monotonic() < deadline:
+        clock.advance(step_s)
+        time.sleep(0.002)
+    return fut
 
 
 # ---------------------------------------------------------------------------
@@ -161,39 +171,53 @@ def test_runtime_retries_exhausted():
 
 
 def test_runtime_heartbeat_timeout_recovers():
+    # virtual time: the hung attempt blocks on the SimClock; advancing past
+    # the heartbeat timeout triggers loss detection with zero real waiting
+    clock = SimClock(auto_advance=False)
     rt = TaskRuntime(_edge_pilot(), max_retries=1,
-                     heartbeat_timeout_s=0.3, monitor_interval_s=0.05)
+                     heartbeat_timeout_s=0.3, monitor_interval_s=0.01,
+                     clock=clock)
     state = {"hung": False}
+    hung = threading.Event()
 
     def task(ctx):
         if ctx.attempt == 0:
             state["hung"] = True
-            time.sleep(2.0)          # no heartbeat -> declared lost
+            hung.set()
+            ctx.clock.sleep(60.0)    # no heartbeat -> declared lost
             return "zombie"
         return "recovered"
 
-    assert rt.submit(task).result(10) == "recovered"
+    fut = rt.submit(task)
+    assert hung.wait(5.0)
+    assert _drive(clock, fut).result(1) == "recovered"
     assert state["hung"]
+    clock.close()
     rt.shutdown(wait=False)
 
 
 def test_runtime_straggler_speculation():
+    clock = SimClock(auto_advance=False)
     rt = TaskRuntime(_edge_pilot(8), speculative_factor=3.0,
-                     monitor_interval_s=0.02)
-    # establish a fast median
+                     monitor_interval_s=0.01, clock=clock)
+    # establish a (virtually instantaneous) median
     for f in rt.map(lambda ctx, x: x, range(6)):
         f.result(5)
+    hung = threading.Event()
 
     def straggler(ctx):
         if ctx.attempt == 0:
-            time.sleep(5.0)          # way past 3x median
+            hung.set()
+            ctx.clock.sleep(600.0)   # way past 3x median
             return "slow"
         return "backup"
 
     fut = rt.submit(straggler)
-    assert fut.result(10) == "backup"
+    assert hung.wait(5.0)
+    assert _drive(clock, fut).result(1) == "backup"
     assert fut.speculated
     assert rt.metrics.counter("runtime.speculative_launches") >= 1
+    clock.close()
     rt.shutdown(wait=False)
 
 
@@ -341,6 +365,39 @@ def test_pipeline_consumer_fault_recovers():
     assert res.n_processed == 30           # nothing lost
     assert res.metrics.counter("runtime.task_errors") == 1
     assert res.metrics.counter("runtime.retries") == 1
+
+
+def test_pipeline_runs_under_manual_simclock():
+    """The threaded pipeline accepts a manually driven SimClock: a driver
+    thread plays time while run() executes, metrics land on virtual
+    timestamps, and shutdown doesn't hang on parked virtual sleepers."""
+    clock = SimClock(auto_advance=False)
+    pipe = _mini_pipeline(clock=clock)
+    stop = threading.Event()
+
+    def drive():
+        while not stop.is_set():
+            clock.advance(0.05)
+            time.sleep(0.001)
+
+    driver = threading.Thread(target=drive, daemon=True)
+    driver.start()
+    t0 = time.monotonic()
+    try:
+        res = pipe.run(n_messages=20, timeout_s=300.0)
+    finally:
+        stop.set()
+        driver.join(5.0)
+        clock.close()
+    assert res.n_processed == 20
+    assert time.monotonic() - t0 < 30.0     # no real-timeout stalls
+    assert res.wall_s < 300.0               # virtual wall, not real
+    assert res.metrics.summary()["count"] == 20
+
+
+def test_pipeline_rejects_auto_advance_clock():
+    with pytest.raises(ValueError):
+        _mini_pipeline(clock=SimClock())
 
 
 def test_pipeline_wan_accounting():

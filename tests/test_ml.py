@@ -79,6 +79,7 @@ def test_kmeans_pallas_impl_matches():
                                atol=0.05, rtol=1e-3)
 
 
+@pytest.mark.slow
 def test_isoforest_separates_outliers():
     gen = MiniAppGenerator(n_points=1500, outlier_frac=0.03, seed=4)
     pts, is_out = gen.sample_with_labels()

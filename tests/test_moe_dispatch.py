@@ -6,7 +6,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (see requirements-test.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.configs import get_arch
 from repro.models import layers as L

@@ -4,9 +4,12 @@ import os
 import subprocess
 import sys
 
+import pytest
+
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
+@pytest.mark.slow
 def test_gpipe_matches_reference():
     env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
     env.pop("XLA_FLAGS", None)

@@ -2,10 +2,16 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
 
-from repro.core.broker import Broker
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (see requirements-test.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.broker import Broker, ConsumerGroup, WanShaper
 from repro.core.monitoring import MetricsRegistry
+from repro.sim.clock import SimClock
 from repro.core.placement import (DEFAULT_LINKS, LinkModel, PlacementEngine,
                                   TaskProfile, link_between)
 from repro.kernels import ref
@@ -40,6 +46,85 @@ def test_broker_conserves_messages_and_order(n_msgs, n_parts, seed):
         offs = [t.partitions[p].log[i].offset for i in range(end)]
         assert offs == list(range(end))
     assert t.metrics.counter(f"topic.{t.name}.bytes_in") == sum(sizes)
+
+
+@given(n_msgs=st.integers(1, 30), n_parts=st.integers(1, 5),
+       n_consumers=st.integers(1, 4), seed=st.integers(0, 1000))
+@settings(**SETTINGS)
+def test_consumer_group_at_least_once_no_offset_gaps(n_msgs, n_parts,
+                                                     n_consumers, seed):
+    """Under virtual time, with random consumer crashes/joins mid-stream,
+    the group delivers every offset at least once (gaps are impossible:
+    commits only advance past processed offsets) and commits never move
+    backwards."""
+    clock = SimClock()
+    b = Broker(clock=clock)
+    t = b.create_topic("t", n_partitions=n_parts)
+    g = ConsumerGroup(t)
+    rng = np.random.default_rng(seed)
+    consumers = [f"c{i}" for i in range(n_consumers)]
+    for c in consumers:
+        g.join(c)
+    for i in range(n_msgs):
+        t.produce(np.array([i]))
+    seen = set()
+    deliveries = 0
+    alive = list(consumers)
+    for _ in range(40 * n_msgs + 400):
+        if g.lag() == 0:
+            break
+        # late re-join of a previously crashed member
+        if len(alive) < n_consumers and rng.random() < 0.15:
+            back = [c for c in consumers if c not in alive][0]
+            alive.append(back)
+            g.join(back)
+        cid = alive[rng.integers(0, len(alive))]
+        before = list(g.committed)
+        msg, _ = g.poll_nowait(cid)
+        if msg is None:
+            clock.advance(0.01)
+            continue
+        deliveries += 1
+        seen.add(int(msg.value()[0]))
+        if len(alive) > 1 and rng.random() < 0.2:
+            # crash *before* the commit: the offset must be redelivered
+            # to a surviving member after the rebalance
+            alive.remove(cid)
+            g.leave(cid)
+        else:
+            g.commit(msg)
+            assert all(a >= b_ for a, b_ in zip(g.committed, before)), \
+                "commit moved backwards"
+    assert g.lag() == 0
+    assert deliveries >= n_msgs          # at-least-once
+    assert seen == set(range(n_msgs))    # every offset delivered, no gaps
+
+
+@given(nbytes=st.integers(1, 10**7), extra=st.integers(0, 10**6),
+       bw_mbit=st.floats(1.0, 200.0), rtt_ms=st.floats(0.0, 500.0))
+@settings(**SETTINGS)
+def test_wan_shaper_monotone_in_size(nbytes, extra, bw_mbit, rtt_ms):
+    """delay_for is monotone in message size (a fresh shaper each side so
+    the token bucket doesn't couple the two measurements)."""
+    kw = dict(bandwidth_bps=bw_mbit * 1e6, rtt_s=rtt_ms / 1e3, sleep=False)
+    d_small = WanShaper(**kw).delay_for(nbytes, now=0.0)
+    d_big = WanShaper(**kw).delay_for(nbytes + extra, now=0.0)
+    assert d_big >= d_small - 1e-12
+    assert d_small >= rtt_ms / 1e3 / 2.0 - 1e-12
+
+
+@given(sizes=st.lists(st.integers(1, 10**6), min_size=2, max_size=20),
+       bw_mbit=st.floats(1.0, 200.0))
+@settings(**SETTINGS)
+def test_wan_shaper_serializes_link(sizes, bw_mbit):
+    """Back-to-back messages queue behind each other: total occupancy of
+    the link equals the sum of the individual transmit times, and each
+    message's clear time is at least the previous one's."""
+    sh = WanShaper(bandwidth_bps=bw_mbit * 1e6, rtt_s=0.0, sleep=False)
+    clears = [sh.delay_for(n, now=0.0) for n in sizes]
+    assert all(b >= a - 1e-9 for a, b in zip(clears, clears[1:]))
+    total_tx = sum(n * 8.0 / (bw_mbit * 1e6) for n in sizes)
+    np.testing.assert_allclose(clears[-1], total_tx, rtol=1e-9, atol=1e-9)
 
 
 # ---------------------------------------------------------------------------

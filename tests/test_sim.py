@@ -1,0 +1,352 @@
+"""Virtual-time emulator tests: SimClock/EventScheduler semantics, broker
+behaviour under virtual time, scenario determinism, and the Fig-3 golden
+placement results (k-means is transfer-bound, autoencoders are
+compute-bound).  Everything here runs in milliseconds of wall time."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (Broker, ComputeResource, ConsumerGroup,
+                        MetricsRegistry, PilotManager, SimClock, WanShaper,
+                        as_clock)
+from repro.core.placement import LinkModel, PlacementEngine
+from repro.sim import EventScheduler
+from repro.sim.scenarios import (AUTOENCODER, KMEANS, FailureSpec, Scenario,
+                                 format_table, placement_estimates,
+                                 run_scenario, sweep)
+
+
+# ---------------------------------------------------------------------------
+# SimClock
+# ---------------------------------------------------------------------------
+
+def test_simclock_advance_and_auto_sleep():
+    c = SimClock()
+    assert c.now() == 0.0
+    c.advance(2.5)
+    assert c.now() == 2.5
+    c.sleep(1.5)                       # auto mode: jumps, no wall blocking
+    assert c.now() == 4.0
+    c.advance_to(3.0)                  # never backwards
+    assert c.now() == 4.0
+    with pytest.raises(ValueError):
+        c.advance(-1.0)
+
+
+def test_simclock_manual_sleep_blocks_until_driven():
+    c = SimClock(auto_advance=False)
+    woke = threading.Event()
+
+    def sleeper():
+        c.sleep(10.0)
+        woke.set()
+
+    th = threading.Thread(target=sleeper, daemon=True)
+    th.start()
+    deadline = time.monotonic() + 5.0
+    while c.sleepers == 0 and time.monotonic() < deadline:
+        time.sleep(0.001)
+    assert c.sleepers == 1
+    assert not woke.is_set()
+    c.advance(9.0)                     # not enough
+    time.sleep(0.02)
+    assert not woke.is_set()
+    c.advance(1.5)                     # past the deadline
+    assert woke.wait(5.0)
+    th.join(5.0)
+
+
+def test_simclock_close_releases_sleepers():
+    c = SimClock(auto_advance=False)
+    done = threading.Event()
+    th = threading.Thread(target=lambda: (c.sleep(1e9), done.set()),
+                          daemon=True)
+    th.start()
+    time.sleep(0.01)
+    c.close()
+    assert done.wait(5.0)
+
+
+def test_as_clock_coerces_callables():
+    t = {"v": 7.0}
+    c = as_clock(lambda: t["v"])
+    assert c.now() == 7.0 and not c.virtual
+    sim = SimClock()
+    assert as_clock(sim) is sim
+    assert not as_clock(None).virtual
+
+
+# ---------------------------------------------------------------------------
+# EventScheduler
+# ---------------------------------------------------------------------------
+
+def test_scheduler_orders_by_time_then_insertion():
+    sched = EventScheduler()
+    out = []
+    sched.at(2.0, lambda: out.append("b"))
+    sched.at(1.0, lambda: out.append("a"))
+    sched.at(2.0, lambda: out.append("c"))   # same time, later insertion
+    ev = sched.at(3.0, lambda: out.append("dropped"))
+    ev.cancel()
+    n = sched.run()
+    assert out == ["a", "b", "c"]
+    assert n == 3
+    assert sched.clock.now() == 2.0
+
+
+def test_scheduler_handlers_schedule_followups():
+    sched = EventScheduler()
+    ticks = []
+
+    def tick():
+        ticks.append(sched.clock.now())
+        if len(ticks) < 5:
+            sched.after(0.5, tick)
+
+    sched.at(0.0, tick)
+    sched.run()
+    assert ticks == [0.0, 0.5, 1.0, 1.5, 2.0]
+
+
+def test_scheduler_run_until_bound():
+    sched = EventScheduler()
+    out = []
+    for i in range(10):
+        sched.at(float(i), lambda i=i: out.append(i))
+    sched.run(until=4.0)
+    assert out == [0, 1, 2, 3, 4]
+    sched.run()
+    assert out == list(range(10))
+
+
+# ---------------------------------------------------------------------------
+# broker under virtual time
+# ---------------------------------------------------------------------------
+
+def test_wan_visibility_honored_under_virtual_clock():
+    """With a virtual clock, a message is invisible until its WAN-shaped
+    ready time; polling jumps time there instead of sleeping."""
+    clock = SimClock()
+    b = Broker(clock=clock)
+    sh = WanShaper(bandwidth_bps=8e6, rtt_s=0.1, sleep=False)   # 1 MB/s
+    t = b.create_topic("t", shaper=sh)
+    t.produce(np.zeros(125_000, np.float64))        # ~1 MB -> ~1.05+ s
+    msg, ready = t.poll_nowait(0, 0)
+    assert msg is None and ready is not None and ready > 1.0
+    msg = t.poll(0, 0, timeout_s=10.0)              # advances virtual time
+    assert msg is not None
+    assert clock.now() >= ready
+    assert clock.now() < 2.0                         # ...but only to ready
+
+
+def test_poll_timeout_expires_in_virtual_time():
+    clock = SimClock()
+    b = Broker(clock=clock)
+    t = b.create_topic("t")
+    t0 = time.perf_counter()
+    assert t.poll(0, 0, timeout_s=30.0) is None      # nothing produced
+    assert time.perf_counter() - t0 < 5.0            # no real 30 s wait
+    assert clock.now() >= 30.0
+
+
+def test_consumer_group_poll_nowait_ready_hint():
+    clock = SimClock()
+    b = Broker(clock=clock)
+    sh = WanShaper(bandwidth_bps=8e6, rtt_s=0.0, sleep=False)
+    t = b.create_topic("t", n_partitions=2, shaper=sh)
+    g = ConsumerGroup(t)
+    g.join("c0")
+    t.produce(np.zeros(125_000 // 8, np.float64), partition=0)
+    msg, ready = g.poll_nowait("c0")
+    assert msg is None and ready is not None
+    clock.advance_to(ready)
+    msg, _ = g.poll_nowait("c0")
+    assert msg is not None
+    g.commit(msg)
+    assert g.lag() == 0
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_consumer_group_rebalance_no_gaps_deterministic(seed):
+    """Seed-parametrized (no-hypothesis) cousin of the property test:
+    random crash-before-commit / rejoin churn never loses an offset."""
+    clock = SimClock()
+    b = Broker(clock=clock)
+    t = b.create_topic("t", n_partitions=3)
+    g = ConsumerGroup(t)
+    rng = np.random.default_rng(seed)
+    consumers = ["c0", "c1", "c2"]
+    for c in consumers:
+        g.join(c)
+    n_msgs = 30
+    for i in range(n_msgs):
+        t.produce(np.array([i]))
+    seen, deliveries, alive = set(), 0, list(consumers)
+    for _ in range(2000):
+        if g.lag() == 0:
+            break
+        if len(alive) < len(consumers) and rng.random() < 0.2:
+            back = [c for c in consumers if c not in alive][0]
+            alive.append(back)
+            g.join(back)
+        cid = alive[rng.integers(0, len(alive))]
+        msg, _ = g.poll_nowait(cid)
+        if msg is None:
+            clock.advance(0.01)
+            continue
+        deliveries += 1
+        seen.add(int(msg.value()[0]))
+        if len(alive) > 1 and rng.random() < 0.25:
+            alive.remove(cid)
+            g.leave(cid)                # crash before commit -> redeliver
+        else:
+            g.commit(msg)
+    assert g.lag() == 0
+    assert deliveries >= n_msgs
+    assert seen == set(range(n_msgs))
+
+
+@pytest.mark.parametrize("bw_mbit", [1.0, 10.0, 80.0])
+def test_wan_shaper_monotone_and_serialized(bw_mbit):
+    bw = bw_mbit * 1e6
+    sizes = [1_000, 10_000, 100_000, 1_000_000]
+    delays = [WanShaper(bandwidth_bps=bw, rtt_s=0.1,
+                        sleep=False).delay_for(n, now=0.0) for n in sizes]
+    assert delays == sorted(delays)
+    sh = WanShaper(bandwidth_bps=bw, rtt_s=0.0, sleep=False)
+    clears = [sh.delay_for(n, now=0.0) for n in sizes]
+    np.testing.assert_allclose(clears[-1],
+                               sum(n * 8.0 / bw for n in sizes), rtol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# scenarios: determinism + the paper's Fig-3 golden results
+# ---------------------------------------------------------------------------
+
+def test_scenario_bit_reproducible():
+    sc = Scenario(model=KMEANS, placement="cloud", wan_band="10mbit",
+                  n_messages=32, seed=7,
+                  failures=(FailureSpec(at_s=1.0, consumer_idx=1),))
+    a, b = run_scenario(sc), run_scenario(sc)
+    assert a.row() == b.row()            # bit-identical metrics
+    assert a.latency_mean_s == b.latency_mean_s
+
+
+def test_scenario_failure_injection_at_least_once():
+    sc = Scenario(model=KMEANS, placement="cloud", wan_band="100mbit",
+                  n_messages=48, seed=1,
+                  failures=(FailureSpec(at_s=0.5, consumer_idx=0,
+                                        restart_after_s=0.5),
+                            FailureSpec(at_s=1.0, consumer_idx=1,
+                                        restart_after_s=None)))
+    r = run_scenario(sc)
+    assert r.n_processed == 48           # nothing lost across rebalances
+    assert r.metrics.events("consumer_crashed")
+    assert r.metrics.events("consumer_restarted")
+
+
+def test_scenario_wall_time_budget():
+    """A Fig-3 cell covering ~minutes of virtual pipeline time must
+    emulate in well under a second."""
+    r = run_scenario(Scenario(model=AUTOENCODER, placement="cloud",
+                              wan_band="10mbit", n_messages=32))
+    assert r.makespan_s > 10.0           # real pipeline time emulated
+    assert r.wall_ms < 5_000.0
+
+
+def test_fig3_kmeans_prefers_edge_on_slow_wan():
+    """Paper Fig 3 (left): k-means is transfer-bound — on a 10 Mbit/s WAN
+    edge placement beats cloud placement by a wide margin, and cloud
+    throughput scales with the WAN band."""
+    edge = run_scenario(Scenario(model=KMEANS, placement="edge",
+                                 wan_band="10mbit", n_messages=48))
+    cloud10 = run_scenario(Scenario(model=KMEANS, placement="cloud",
+                                    wan_band="10mbit", n_messages=48))
+    cloud100 = run_scenario(Scenario(model=KMEANS, placement="cloud",
+                                     wan_band="100mbit", n_messages=48))
+    assert edge.throughput_msgs_s > 5 * cloud10.throughput_msgs_s
+    assert cloud100.throughput_msgs_s > 3 * cloud10.throughput_msgs_s
+    # transfer-bound: raw points cross the WAN only under cloud placement
+    assert cloud10.wan_mbytes > 10 * edge.wan_mbytes
+
+
+def test_fig3_autoencoder_wan_insensitive():
+    """Paper Fig 3 (right): the autoencoder is compute-bound — placement
+    ranking is unchanged across WAN bands and cloud throughput barely
+    moves between 10 and 100 Mbit/s."""
+    results = {}
+    for band in ("10mbit", "100mbit"):
+        for placement in ("edge", "cloud"):
+            r = run_scenario(Scenario(model=AUTOENCODER,
+                                      placement=placement, wan_band=band,
+                                      n_messages=32))
+            results[(band, placement)] = r.throughput_msgs_s
+    for band in ("10mbit", "100mbit"):
+        assert results[(band, "cloud")] > 3 * results[(band, "edge")]
+    ratio = results[("100mbit", "cloud")] / results[("10mbit", "cloud")]
+    assert ratio < 1.2                   # the network is not the bottleneck
+
+
+def test_placement_engine_agrees_with_emulation():
+    """The cost model the PlacementEngine prices placements with must give
+    the same qualitative answer as the emulator (same FLOPS constants)."""
+    est_k = placement_estimates(Scenario(model=KMEANS, wan_band="10mbit"))
+    assert est_k["edge"] < est_k["cloud"]       # k-means: stay on the edge
+    for band in ("10mbit", "100mbit"):
+        est_a = placement_estimates(Scenario(model=AUTOENCODER,
+                                             wan_band=band))
+        assert est_a["cloud"] < est_a["edge"]   # AE: always ship to cloud
+
+
+def test_placement_engine_fig3_golden_links():
+    """Golden pin of the Fig-3 qualitative result straight on the engine:
+    k-means prefers the edge under a 10 Mbit/s WAN, the autoencoder ships
+    to the cloud on every band, and a WAN upgrade helps the transfer-bound
+    profile far more than the compute-bound one."""
+    mgr = PilotManager(devices=())
+    edge = mgr.submit_pilot(ComputeResource(tier="edge", n_workers=4))
+    cloud = mgr.submit_pilot(ComputeResource(tier="cloud", n_workers=4))
+    k_prof = KMEANS.task_profile(2_500)
+    a_prof = AUTOENCODER.task_profile(2_500)
+
+    def engine(bw_mbit):
+        links = {("edge", "cloud"): LinkModel(bandwidth=bw_mbit * 1e6 / 8,
+                                              latency_s=0.15)}
+        return PlacementEngine(links=links)
+
+    e10, e100 = engine(10.0), engine(100.0)
+    assert e10.place(k_prof, [edge, cloud]).pilot.tier == "edge"
+    for eng in (e10, e100):
+        assert eng.place(a_prof, [edge, cloud]).pilot.tier == "cloud"
+    # WAN upgrade shrinks the k-means cloud estimate much more than AE's
+    k_ratio = (e100.estimate(k_prof, cloud).est_time_s
+               / e10.estimate(k_prof, cloud).est_time_s)
+    a_ratio = (e100.estimate(a_prof, cloud).est_time_s
+               / e10.estimate(a_prof, cloud).est_time_s)
+    assert k_ratio < a_ratio < 1.0
+
+
+def test_sweep_and_table():
+    rows = sweep(models=(KMEANS,), placements=("edge", "cloud"),
+                 bands=("10mbit",), n_messages=16)
+    assert len(rows) == 2
+    table = format_table(rows)
+    assert "kmeans" in table and "msg/s" in table
+    assert all(r.n_processed == 16 for r in rows)
+
+
+# ---------------------------------------------------------------------------
+# metrics under an injected clock
+# ---------------------------------------------------------------------------
+
+def test_metrics_stamps_use_injected_clock():
+    clock = SimClock()
+    reg = MetricsRegistry(clock=clock)
+    reg.stamp("m", "produced")
+    clock.advance(3.0)
+    reg.stamp("m", "processed")
+    assert reg.latencies("produced", "processed") == [3.0]
+    assert reg.first_stamp("produced") == 0.0
+    assert reg.last_stamp("processed") == 3.0
