@@ -15,6 +15,8 @@ Public API (Listing 1 & 2 of the paper):
 """
 from repro.core.broker import Broker, ConsumerGroup, Message, Topic, WanShaper
 from repro.core.elastic import AutoScaler, ScalePolicy, remesh_restart
+from repro.core.executor import (Poll, Service, SimExecutor, Sleep,
+                                 ThreadedExecutor)
 from repro.core.faas import EdgeToCloudPipeline, PipelineResult
 from repro.core.monitoring import MetricsRegistry
 from repro.core.params_service import ParameterService
@@ -27,6 +29,7 @@ from repro.sim.clock import SimClock, SystemClock, as_clock
 
 __all__ = [
     "SimClock", "SystemClock", "as_clock",
+    "ThreadedExecutor", "SimExecutor", "Poll", "Service", "Sleep",
     "Broker", "ConsumerGroup", "Message", "Topic", "WanShaper",
     "AutoScaler", "ScalePolicy", "remesh_restart",
     "EdgeToCloudPipeline", "PipelineResult",

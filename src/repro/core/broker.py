@@ -138,6 +138,24 @@ class Topic:
         self.shaper = shaper
         self._clock = as_clock(clock)
         self._rr = itertools.count()
+        self._subs: List = []
+        self._subs_lock = threading.Lock()
+
+    # -- append notifications ---------------------------------------------
+
+    def subscribe(self, fn) -> None:
+        """Register ``fn(partition, ready_at)`` to fire after every append.
+        This is what makes event-driven consumers possible: instead of
+        polling on a sleep cadence, a parked consumer is woken exactly when
+        a message lands (or becomes WAN-visible). Callbacks run on the
+        producing thread/event and must not block."""
+        with self._subs_lock:
+            self._subs.append(fn)
+
+    def unsubscribe(self, fn) -> None:
+        with self._subs_lock:
+            if fn in self._subs:
+                self._subs.remove(fn)
 
     def _honor_visibility(self) -> bool:
         """WAN-shaped visibility times are enforced when waiting for them
@@ -180,6 +198,10 @@ class Topic:
         self.metrics.stamp(msg_id, "broker_in", wan_delay_s=delay)
         self.metrics.incr(f"topic.{self.name}.bytes_in", msg.nbytes)
         self.metrics.incr(f"topic.{self.name}.msgs_in")
+        with self._subs_lock:
+            subs = list(self._subs)
+        for fn in subs:
+            fn(partition, now + delay)
         return msg
 
     # -- consumer side -----------------------------------------------------

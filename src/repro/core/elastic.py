@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import threading
 from dataclasses import dataclass
-from typing import Callable, Optional
+from typing import Callable, Dict, List, Optional
 
 from repro.core.monitoring import MetricsRegistry
 from repro.core.pilot import Pilot, PilotManager
@@ -58,6 +58,9 @@ class AutoScaler:
         # cooldowns measured on the injected clock; emulated scenarios can
         # step through hours of scaling decisions in zero wall time
         self._last_action = -float("inf")
+        # every resize, timestamped on the injected clock — under
+        # SimExecutor this trace is bit-identical across repeated runs
+        self.history: List[Dict[str, float]] = []
 
     def step_once(self) -> Optional[int]:
         """One scaling decision; returns the new worker count if changed."""
@@ -74,6 +77,8 @@ class AutoScaler:
         if new is not None and new != workers:
             self.manager.resize(self.pilot, n_workers=new)
             self._last_action = now
+            self.history.append({"t": now, "from_workers": workers,
+                                 "to_workers": new, "lag": lag})
             self.metrics.event("autoscale", pilot=self.pilot.pilot_id,
                                from_workers=workers, to_workers=new,
                                lag=lag)

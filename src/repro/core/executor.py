@@ -1,0 +1,572 @@
+"""Execution strategies for :class:`~repro.core.faas.EdgeToCloudPipeline`.
+
+The pipeline's task loops (edge producers, cloud consumers) are written
+once, as *cooperative generator bodies* (``faas._producer_body`` /
+``faas._consumer_body``) that yield effects instead of blocking:
+
+* :class:`Sleep`   — wait a number of seconds,
+* :class:`Service` — charge a stage's service time (priced by the
+  strategy's ``service_model``; zero by default),
+* :class:`Poll`    — fetch the next message from a consumer group.
+
+Two strategies interpret those effects:
+
+* :class:`ThreadedExecutor` — real threads on :class:`TaskRuntime`
+  (production / live-demo behaviour; effects resolve to blocking calls).
+  This is the default and matches the pre-refactor pipeline exactly.
+* :class:`SimExecutor` — a single-threaded discrete-event simulation on
+  :class:`~repro.sim.scheduler.EventScheduler`: bodies run as DES actors,
+  consumers are *event-driven* (woken by broker append notifications and
+  exact WAN-visibility times — no polling sleeps), heartbeat monitoring,
+  retries, crash/rebalance injection and the lag-driven
+  :class:`~repro.core.elastic.AutoScaler` all run as scheduled events on
+  one virtual clock. A run is a pure function of (pipeline config,
+  executor config, seed): metrics are bit-identical across repeats.
+
+``pipe.run(scheduler=SimExecutor(...))`` therefore exercises the *genuine*
+pipeline — same broker offsets, consumer-group rebalances, dedup and
+metrics stamps as production — under reproducible virtual time.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+from repro.core.runtime import TaskContext, TaskRuntime
+from repro.sim.clock import SimClock
+from repro.sim.scheduler import ActorKilled, EventScheduler
+
+# service_model(stage, ctx, payload) -> seconds of service time to charge
+ServiceModel = Callable[[str, TaskContext, Any], float]
+
+
+# ---------------------------------------------------------------------------
+# effects
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Sleep:
+    """Wait ``seconds`` (virtual under SimExecutor, clock-real otherwise)."""
+    seconds: float
+
+
+@dataclass(frozen=True)
+class Service:
+    """Charge the strategy's service model for one ``stage`` invocation."""
+    stage: str
+    payload: Any = None
+
+
+@dataclass(frozen=True)
+class Poll:
+    """Next message from ``group`` for ``consumer_id`` — or ``None``.
+
+    Threaded: a blocking ``group.poll(timeout_s)`` (periodic ``None``
+    returns let the body re-check stop/idle conditions). Sim: the actor
+    parks until an append notification, the message's WAN ``ready_at``, a
+    stop, or ``wake_at`` (the body's idle deadline) — no idle ticking.
+    """
+    group: Any
+    consumer_id: str
+    timeout_s: float = 0.2
+    wake_at: Optional[float] = None
+
+
+# ---------------------------------------------------------------------------
+# threaded strategy (today's behaviour)
+# ---------------------------------------------------------------------------
+
+
+class ThreadedExecutor:
+    """Run the pipeline bodies on real threads via :class:`TaskRuntime`.
+
+    ``service_model`` is optional wall-pacing (used by live demos to make
+    stage costs real); by default effects cost nothing and behaviour is
+    identical to the historical thread-scheduled pipeline.
+    """
+
+    def __init__(self, *, service_model: Optional[ServiceModel] = None):
+        self.service_model = service_model
+
+    def run(self, pipe, *, n_messages: int, timeout_s: float,
+            collect_results: bool):
+        clock = pipe._clock
+        if getattr(clock, "auto_advance", False):
+            # concurrent waiters would race a fast-forward clock past the
+            # run deadline while work is in flight; auto-advance virtual
+            # time belongs to the single-threaded SimExecutor.
+            raise ValueError(
+                "ThreadedExecutor needs a wall clock or a manually driven "
+                "SimClock(auto_advance=False); pass "
+                "scheduler=SimExecutor(...) for auto-advance virtual time")
+        state = pipe._setup_run(n_messages, timeout_s, collect_results)
+        t0 = clock.now()
+
+        def interpret(ctx: TaskContext, eff: Any) -> Any:
+            if isinstance(eff, Sleep):
+                clock.sleep(max(eff.seconds, 0.0))
+                return None
+            if isinstance(eff, Service):
+                s = (self.service_model(eff.stage, ctx, eff.payload)
+                     if self.service_model else 0.0)
+                if s > 0:
+                    clock.sleep(s)
+                return None
+            if isinstance(eff, Poll):
+                return eff.group.poll(eff.consumer_id,
+                                      timeout_s=eff.timeout_s)
+            raise TypeError(f"unknown pipeline effect {eff!r}")
+
+        edge_rt = TaskRuntime(pipe.pilot_edge, pipe.metrics,
+                              interpreter=interpret, **pipe._runtime_kw)
+        cloud_rt = TaskRuntime(pipe.pilot_cloud, pipe.metrics,
+                               interpreter=interpret, **pipe._runtime_kw)
+        producer_futs = [
+            edge_rt.submit(pipe._producer_body, state, i,
+                           state.per_device[i])
+            for i in range(pipe.n_edge_devices)]
+        consumer_futs = [
+            cloud_rt.submit(pipe._consumer_body, state, f"consumer-{i}")
+            for i in range(pipe.cloud_consumers)]
+
+        # the semaphore wait is real (worker threads are real) but the
+        # deadline is measured on the injected clock; with a virtual clock
+        # the real wait must stay short so deadline advances (driven from
+        # another thread) are observed promptly
+        deadline = t0 + timeout_s
+        remaining = n_messages
+        while remaining > 0:
+            wait_s = min(deadline - clock.now(), timeout_s)
+            if clock.virtual:
+                wait_s = min(wait_s, 0.05)
+            if state.processed_sem.acquire(timeout=max(wait_s, 0.01)):
+                remaining -= 1
+            elif clock.now() >= deadline:
+                break
+        state.stop.set()
+        wall = (state.t_done if state.t_done is not None
+                else clock.now()) - t0     # before any shutdown nudging
+        for f in producer_futs + consumer_futs:
+            # with a manual virtual clock, workers may be parked inside
+            # clock.sleep waiting for time the external driver will never
+            # provide once the run is over — tick the clock while joining
+            # so their poll loops observe stop and exit
+            for _ in range(1000):           # ~10 s real bound per future
+                if clock.virtual:
+                    clock.advance(0.01)
+                try:
+                    f.result(timeout=0.01)
+                    break
+                except TimeoutError:
+                    continue
+                except Exception:  # noqa: BLE001 — task errors already counted
+                    break
+        edge_rt.shutdown(wait=False)
+        cloud_rt.shutdown(wait=False)
+        return pipe._finish(state, wall)
+
+
+# ---------------------------------------------------------------------------
+# DES strategy
+# ---------------------------------------------------------------------------
+
+
+class _PollWait:
+    """A consumer actor parked on an empty Poll, waiting to be woken.
+    ``timeout_ev`` is the scheduled fallback wake (WAN ready_at or the
+    body's idle deadline), cancelled when something wakes the wait first."""
+
+    __slots__ = ("rec", "actor", "eff", "resolved", "timeout_ev")
+
+    def __init__(self, rec: dict, actor, eff: Poll):
+        self.rec = rec
+        self.actor = actor
+        self.eff = eff
+        self.resolved = False
+        self.timeout_ev = None
+
+
+class SimExecutor:
+    """Single-threaded DES strategy: the whole pipeline run — producers,
+    consumers, WAN visibility, heartbeat monitoring, retries, crash
+    injection, autoscaling — executes as events on one auto-advance
+    :class:`SimClock`, bit-reproducibly. Single use: build one per run.
+
+    Parameters
+    ----------
+    clock: the pipeline's auto-advance ``SimClock`` (adopted from the
+        pipeline if omitted — the pipeline must then have been constructed
+        with one, so broker/metrics stamps share the virtual timeline).
+    service_model: prices ``Service`` effects (seconds per stage call) —
+        how emulated runs charge compute time for stages whose real
+        execution is instantaneous in virtual time.
+    producer_offsets: per-device start offsets (virtual seconds) so edge
+        devices don't boot in lockstep.
+    crash_plan: objects with ``at_s`` / ``consumer_idx`` /
+        ``restart_after_s`` / optional ``kind`` (``"crash"`` raises inside
+        the consumer mid-run; ``"silent"`` goes dark so the heartbeat
+        monitor must detect the loss). ``repro.sim.scenarios.FailureSpec``
+        matches this shape.
+    autoscaler: an :class:`~repro.core.elastic.AutoScaler` stepped every
+        ``autoscale_interval_s`` of virtual time; after each resize the
+        executor grows/shrinks the live consumer pool to the pilot's
+        worker count (scaling decisions visibly change the dataflow).
+    """
+
+    def __init__(self, clock: Optional[SimClock] = None, *,
+                 service_model: Optional[ServiceModel] = None,
+                 producer_offsets: Sequence[float] = (),
+                 crash_plan: Sequence[Any] = (),
+                 autoscaler=None,
+                 autoscale_interval_s: float = 0.2,
+                 monitor_interval_s: float = 0.5):
+        self.clock = clock
+        self.service_model = service_model
+        self.producer_offsets = tuple(producer_offsets)
+        self.crash_plan = tuple(crash_plan)
+        self.autoscaler = autoscaler
+        self.autoscale_interval_s = autoscale_interval_s
+        self.monitor_interval_s = monitor_interval_s
+        self.sched: Optional[EventScheduler] = None
+
+    def run(self, pipe, *, n_messages: int, timeout_s: float,
+            collect_results: bool):
+        clock = pipe._clock
+        if self.clock is None:
+            self.clock = clock
+        if self.clock is not clock:
+            raise ValueError(
+                "SimExecutor clock must be the pipeline's clock object "
+                "(broker/metrics/autoscaler all stamp the same timeline)")
+        if not (isinstance(clock, SimClock) and clock.auto_advance):
+            raise ValueError(
+                "SimExecutor needs the pipeline built on an auto-advance "
+                "SimClock: EdgeToCloudPipeline(..., clock=SimClock())")
+        self.sched = EventScheduler(clock)
+        state = pipe._setup_run(n_messages, timeout_s, collect_results)
+        return _SimRun(self, pipe, state).execute()
+
+
+class _SimRun:
+    """One SimExecutor pipeline run's actor/task bookkeeping."""
+
+    def __init__(self, ex: SimExecutor, pipe, state):
+        self.ex = ex
+        self.pipe = pipe
+        self.state = state
+        self.sched = ex.sched
+        self.clock = ex.clock
+        self.metrics = pipe.metrics
+        self.max_retries = pipe._runtime_kw["max_retries"]
+        self.heartbeat_timeout_s = pipe._runtime_kw["heartbeat_timeout_s"]
+        self.tasks: Dict[str, dict] = {}
+        self.consumer_recs: List[dict] = []       # spawn order (autoscale)
+        self._task_seq = itertools.count()
+        self._consumer_seq = itertools.count(pipe.cloud_consumers)
+        self.shared: dict = {}
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def execute(self):
+        pipe, state = self.pipe, self.state
+        t0 = self.clock.now()
+        state.topic.subscribe(self._on_append)
+        offs = self.ex.producer_offsets
+        for i, count in enumerate(state.per_device):
+            off = offs[i] if i < len(offs) else 0.0
+            self._spawn("producer", None, at=t0 + max(off, 0.0),
+                        body=lambda ctx, i=i, c=count:
+                        pipe._producer_body(ctx, state, i, c))
+        for i in range(pipe.cloud_consumers):
+            self._spawn_consumer(f"consumer-{i}", at=t0)
+        for f in self.ex.crash_plan:
+            self.sched.at(t0 + float(f.at_s), lambda f=f: self._inject(f))
+        if self.ex.autoscaler is not None:
+            self.sched.after(self.ex.autoscale_interval_s,
+                             self._autoscale_tick)
+        self.sched.after(self.ex.monitor_interval_s, self._monitor_tick)
+
+        deadline = t0 + state.timeout_s
+        while not state.stop.is_set():
+            nt = self.sched.next_time
+            if nt is None or nt > deadline:
+                break
+            self.sched.step()
+        if state.t_done is None:
+            state.t_done = min(self.clock.now(), deadline)
+        state.stop.set()
+        state.topic.unsubscribe(self._on_append)
+        return pipe._finish(state, state.t_done - t0)
+
+    # -- task spawning -----------------------------------------------------
+
+    def _spawn(self, kind: str, cid: Optional[str], *, body,
+               at: Optional[float] = None) -> dict:
+        pilot = (self.pipe.pilot_edge if kind == "producer"
+                 else self.pipe.pilot_cloud)
+        pilot.require_active()
+        rec = {"task_id": f"{pilot.pilot_id}-sim-{next(self._task_seq)}",
+               "kind": kind, "cid": cid, "make_body": body, "pilot": pilot,
+               "attempt": 0, "retries_left": self.max_retries,
+               "actor": None, "ctx": None, "wait": None,
+               "last_beat": self.clock.now(), "exit_reason": None}
+        self.tasks[rec["task_id"]] = rec
+        if kind == "consumer":
+            self.consumer_recs.append(rec)
+        self.metrics.incr("runtime.submitted")
+        self._launch(rec, at=at)
+        return rec
+
+    def _spawn_consumer(self, cid: str,
+                        at: Optional[float] = None) -> dict:
+        pipe, state = self.pipe, self.state
+        return self._spawn(
+            "consumer", cid, at=at,
+            body=lambda ctx, cid=cid: pipe._consumer_body(ctx, state, cid))
+
+    def _launch(self, rec: dict, at: Optional[float] = None) -> None:
+        if self.state.stop.is_set() or rec["task_id"] not in self.tasks:
+            return
+        pilot = rec["pilot"]
+        ctx = TaskContext(
+            pilot_id=pilot.pilot_id, tier=pilot.tier,
+            task_id=rec["task_id"], attempt=rec["attempt"],
+            shared=self.shared, clock=self.clock,
+            _heartbeat=lambda: self._beat(rec))
+        rec["ctx"] = ctx
+        rec["last_beat"] = self.clock.now()
+        rec["actor"] = self.sched.spawn(
+            rec["make_body"](ctx), name=rec["task_id"], at=at,
+            interpret=lambda actor, eff: self._interpret(rec, actor, eff),
+            on_exit=lambda actor, exc, res: self._on_exit(rec, exc))
+        if rec["kind"] == "consumer":
+            # the new member's join rebalances partition assignments —
+            # parked survivors may now own pending messages. Scheduled at
+            # the same timestamp (later insertion seq), this runs right
+            # after the actor's first step, i.e. after its group.join.
+            self.sched.at(self.clock.now() if at is None else at,
+                          self._wake_all_parked)
+
+    def _beat(self, rec: dict) -> None:
+        rec["last_beat"] = self.clock.now()
+
+    # -- effect interpretation --------------------------------------------
+
+    def _interpret(self, rec: dict, actor, eff: Any) -> None:
+        self._beat(rec)
+        if isinstance(eff, Sleep):
+            actor.resume(None, delay=max(eff.seconds, 0.0))
+            return
+        if isinstance(eff, Service):
+            model = self.ex.service_model
+            secs = (model(eff.stage, rec["ctx"], eff.payload)
+                    if model is not None else 0.0)
+            actor.resume(None, delay=max(secs, 0.0))
+            return
+        if isinstance(eff, Poll):
+            self._attempt_poll(rec, actor, eff)
+            return
+        actor.kill(TypeError(f"unknown pipeline effect {eff!r}"))
+
+    def _attempt_poll(self, rec: dict, actor, eff: Poll) -> None:
+        if not actor.alive:
+            return
+        state = self.state
+        if state.stop.is_set() or state.n_processed >= state.n_messages:
+            rec["wait"] = None
+            actor.resume(None)
+            return
+        msg, ready = eff.group.poll_nowait(eff.consumer_id)
+        if msg is not None:
+            rec["wait"] = None
+            self._beat(rec)
+            actor.resume(msg)
+            return
+        # park until an append / stop / the fallback wake. Parked on the
+        # framework — including waiting out a WAN-crossing message's exact
+        # ready_at — is not a hung task: the monitor skips recs with a
+        # live wait, and _beat keeps the timestamps honest.
+        self._beat(rec)
+        wait = _PollWait(rec, actor, eff)
+        rec["wait"] = wait
+        if ready is not None:
+            # message in flight across the WAN: exact wakeup at ready_at
+            wait.timeout_ev = self.sched.at(
+                ready, lambda: self._wake(wait, False))
+        elif eff.wake_at is not None:
+            wait.timeout_ev = self.sched.at(
+                eff.wake_at, lambda: self._wake(wait, True))
+
+    def _wake(self, wait: _PollWait, timed_out: bool) -> None:
+        if wait.resolved or not wait.actor.alive:
+            return
+        wait.resolved = True
+        wait.rec["wait"] = None
+        if wait.timeout_ev is not None:
+            wait.timeout_ev.cancel()
+            wait.timeout_ev = None
+        self._beat(wait.rec)
+        if timed_out or self.state.stop.is_set():
+            wait.actor.resume(None)
+            return
+        self._attempt_poll(wait.rec, wait.actor, wait.eff)
+
+    def _on_append(self, partition: int, ready_at: float) -> None:
+        now = self.clock.now()
+        for rec in list(self.tasks.values()):
+            wait = rec["wait"]
+            if wait is None or wait.resolved:
+                continue
+            # only wake waiters actually assigned this partition (a
+            # membership change re-checks everyone via _wake_all_parked)
+            if partition not in wait.eff.group.partitions_for(
+                    wait.eff.consumer_id):
+                continue
+            self.sched.at(max(ready_at, now),
+                          lambda w=wait: self._wake(w, False))
+
+    def _wake_all_parked(self) -> None:
+        """Rebalance wakeup: membership changed (join/leave), so parked
+        consumers may now be assigned partitions with pending messages."""
+        for rec in list(self.tasks.values()):
+            wait = rec["wait"]
+            if wait is not None and not wait.resolved:
+                self._wake(wait, False)
+
+    def _clear_wait(self, rec: dict) -> None:
+        wait = rec["wait"]
+        if wait is not None:
+            wait.resolved = True
+            if wait.timeout_ev is not None:
+                wait.timeout_ev.cancel()
+                wait.timeout_ev = None
+            rec["wait"] = None
+
+    def _release_inflight(self, rec: dict) -> None:
+        """A silently-dropped consumer can die holding a dedup reservation
+        (its generator is never thrown into, so the body's exception
+        handler can't release it). Release it here or the redeliveries of
+        that message would be dropped as duplicates forever."""
+        mid = self.state.inflight.pop((rec["cid"], rec["attempt"]), None)
+        if mid is not None:
+            with self.state.lock:
+                self.state.seen_ids.discard(mid)
+
+    # -- exits / failures / retries ---------------------------------------
+
+    def _on_exit(self, rec: dict, exc: Optional[BaseException]) -> None:
+        rec["actor"] = None
+        self._clear_wait(rec)
+        if exc is None:
+            self.tasks.pop(rec["task_id"], None)
+            self.metrics.incr("runtime.completed")
+            return
+        if isinstance(exc, ActorKilled):
+            self.tasks.pop(rec["task_id"], None)
+            if rec["kind"] == "consumer":
+                self.state.group.leave(rec["cid"])
+                self._wake_all_parked()
+            if rec["exit_reason"] == "retire":
+                self.metrics.event("consumer_retired", consumer=rec["cid"])
+            else:
+                self.metrics.event("consumer_crashed", consumer=rec["cid"])
+            return
+        self._task_error(rec, exc)
+
+    def _task_error(self, rec: dict, exc: BaseException) -> None:
+        self.metrics.incr("runtime.task_errors")
+        self.metrics.event("task_error", task_id=rec["task_id"],
+                           error=repr(exc)[:200])
+        retries = rec["retries_left"]
+        rec["retries_left"] = retries - 1
+        if retries > 0 and not self.state.stop.is_set():
+            self.metrics.incr("runtime.retries")
+            rec["attempt"] += 1
+            delay = 0.01 * (2 ** (self.max_retries - retries))
+            self.sched.after(delay, lambda: self._launch(rec))
+        else:
+            self.tasks.pop(rec["task_id"], None)
+            if rec["kind"] == "consumer":
+                # free the failed member's partitions for the survivors
+                self.state.group.leave(rec["cid"])
+                self._wake_all_parked()
+            self.metrics.event("task_failed", task_id=rec["task_id"])
+
+    # -- crash / rebalance injection --------------------------------------
+
+    def _inject(self, f: Any) -> None:
+        if self.state.stop.is_set():
+            return
+        cid = f"consumer-{f.consumer_idx}"
+        rec = next((r for r in self.consumer_recs
+                    if r["cid"] == cid and r["actor"] is not None
+                    and r["actor"].alive), None)
+        if rec is not None:
+            if getattr(f, "kind", "crash") == "silent":
+                # the node goes dark: no exception, no cleanup — only the
+                # heartbeat monitor can notice (frozen last_beat)
+                rec["actor"].drop()
+                self._clear_wait(rec)
+                self._release_inflight(rec)
+            else:
+                rec["exit_reason"] = "crash"
+                rec["actor"].kill()
+        restart = getattr(f, "restart_after_s", None)
+        if restart is not None:
+            self.sched.after(float(restart),
+                             lambda: self._restart(f"{cid}-r"))
+
+    def _restart(self, cid: str) -> None:
+        if self.state.stop.is_set():
+            return
+        self.metrics.event("consumer_restarted", consumer=cid)
+        self._spawn_consumer(cid)
+
+    # -- periodic machinery: heartbeats + autoscaler ----------------------
+
+    def _monitor_tick(self) -> None:
+        if self.state.stop.is_set() or not self.tasks:
+            return
+        now = self.clock.now()
+        for rec in list(self.tasks.values()):
+            if rec["wait"] is not None:        # parked = framework-idle
+                continue
+            if rec["actor"] is None:           # between retry launches
+                continue
+            if now - rec["last_beat"] > self.heartbeat_timeout_s:
+                rec["actor"].drop()
+                rec["actor"] = None
+                if rec["kind"] == "consumer":
+                    self._release_inflight(rec)
+                    # session timeout: rebalance the lost member out
+                    self.state.group.leave(rec["cid"])
+                    self._wake_all_parked()
+                    self.metrics.event("consumer_lost", consumer=rec["cid"])
+                self._task_error(
+                    rec, TimeoutError(
+                        f"heartbeat lost ({rec['task_id']})"))
+        self.sched.after(self.ex.monitor_interval_s, self._monitor_tick)
+
+    def _alive_consumers(self) -> List[dict]:
+        return [r for r in self.consumer_recs
+                if r["task_id"] in self.tasks]
+
+    def _autoscale_tick(self) -> None:
+        if self.state.stop.is_set():
+            return
+        self.ex.autoscaler.step_once()
+        target = self.pipe.pilot_cloud.resource.n_workers
+        alive = self._alive_consumers()
+        if target > len(alive):
+            for _ in range(target - len(alive)):
+                cid = f"consumer-{next(self._consumer_seq)}"
+                self.metrics.event("consumer_spawned", consumer=cid)
+                self._spawn_consumer(cid)
+        elif target < len(alive):
+            for rec in alive[target:]:         # retire the newest first
+                if rec["actor"] is not None and rec["actor"].alive:
+                    rec["exit_reason"] = "retire"
+                    rec["actor"].kill()
+        self.sched.after(self.ex.autoscale_interval_s, self._autoscale_tick)

@@ -22,10 +22,19 @@ per edge device, the paper's baseline layout), and manages the dataflow
 edge → [process_edge] → broker → cloud. All hops stamp the shared
 MetricsRegistry; results are collected from the cloud stage.
 
+Execution strategy: the producer/consumer loops are cooperative generator
+bodies (see :mod:`repro.core.executor`) selected by ``run(scheduler=)``:
+
+* ``ThreadedExecutor`` (default) — real threads, today's behaviour;
+* ``SimExecutor`` — the same genuine pipeline as a single-threaded
+  discrete-event simulation under an auto-advance
+  :class:`~repro.sim.clock.SimClock`, bit-reproducible run to run.
+
 Dynamism (paper §II-D): ``replace_function(stage, fn)`` hot-swaps a stage's
 payload at runtime *without* re-allocating pilots (e.g. exchanging low- vs
 high-fidelity models), and pilots can be resized through the PilotManager
-while the pipeline runs.
+while the pipeline runs (the AutoScaler drives this inside the DES — see
+``SimExecutor(autoscaler=...)``).
 """
 from __future__ import annotations
 
@@ -34,14 +43,13 @@ import threading
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
 
-import numpy as np
-
 from repro.core.broker import Broker, ConsumerGroup, Topic, WanShaper
+from repro.core.executor import Poll, Service, ThreadedExecutor
 from repro.core.monitoring import MetricsRegistry
 from repro.core.params_service import ParameterService
 from repro.core.pilot import Pilot
 from repro.core.placement import PlacementEngine, TaskProfile
-from repro.core.runtime import TaskContext, TaskRuntime
+from repro.core.runtime import TaskContext
 from repro.sim.clock import Clock, as_clock
 
 ProduceFn = Callable[[TaskContext], Any]
@@ -67,6 +75,28 @@ class PipelineResult:
 
     def per_hop(self):
         return self.metrics.per_hop_latency()
+
+
+@dataclass
+class _RunState:
+    """Per-``run`` shared state between the task bodies and the strategy."""
+    topic: Topic
+    group: ConsumerGroup
+    per_device: List[int]
+    n_messages: int
+    timeout_s: float
+    collect: bool
+    results: List[Any] = field(default_factory=list)
+    seen_ids: set = field(default_factory=set)
+    # (cid, attempt) -> msg_id currently holding a dedup reservation, so
+    # the executor can release it if the attempt dies without unwinding
+    inflight: Dict = field(default_factory=dict)
+    lock: threading.Lock = field(default_factory=threading.Lock)
+    stop: threading.Event = field(default_factory=threading.Event)
+    processed_sem: threading.Semaphore = field(
+        default_factory=lambda: threading.Semaphore(0))
+    n_processed: int = 0
+    t_done: Optional[float] = None      # clock time the target was reached
 
 
 class EdgeToCloudPipeline:
@@ -97,17 +127,11 @@ class EdgeToCloudPipeline:
         self.pilot_edge = pilot_edge
         self.pilot_cloud = pilot_cloud_processing
         self.pilot_broker = pilot_cloud_broker or pilot_cloud_processing
+        # an auto-advance SimClock here means the pipeline is destined for
+        # run(scheduler=SimExecutor(...)); ThreadedExecutor re-checks and
+        # rejects it at run time (threads can't coordinate on a clock that
+        # fast-forwards under them).
         self._clock = as_clock(clock)
-        if getattr(self._clock, "auto_advance", False):
-            # the threaded run loop cannot coordinate on fast-forward time:
-            # concurrent waiters would race the shared clock past the run
-            # deadline while work is still in flight. Use a manually-driven
-            # SimClock here, or the single-threaded DES harness
-            # (repro.sim.scenarios) for fully virtual pipeline runs.
-            raise ValueError(
-                "EdgeToCloudPipeline needs a wall clock or a manually "
-                "driven SimClock(auto_advance=False); for auto-advance "
-                "virtual time use repro.sim.scenarios.run_scenario")
         self.metrics = metrics or MetricsRegistry(clock=self._clock)
         self.broker = broker or Broker(metrics=self.metrics,
                                        clock=self._clock)
@@ -136,7 +160,7 @@ class EdgeToCloudPipeline:
                                 heartbeat_timeout_s=heartbeat_timeout_s,
                                 clock=self._clock)
         self._topic: Optional[Topic] = None
-        self._stop = threading.Event()
+        self._group: Optional[ConsumerGroup] = None
 
     # -- dynamism ------------------------------------------------------------
 
@@ -154,6 +178,13 @@ class EdgeToCloudPipeline:
         with self._fn_lock:
             return self._fns[stage]
 
+    def current_lag(self) -> int:
+        """Broker lag of the live run's consumer group — the natural
+        ``lag_fn`` for an :class:`~repro.core.elastic.AutoScaler` watching
+        this pipeline (0 when no run is active)."""
+        g = self._group
+        return g.lag() if g is not None else 0
+
     # -- placement ------------------------------------------------------------
 
     def _choose_cloud_pilot(self, candidates: List[Pilot]) -> Pilot:
@@ -166,137 +197,124 @@ class EdgeToCloudPipeline:
             preferred_tiers=tuple(self.context.get("preferred_tiers", ())))
         return self.placement_engine.place(profile, candidates).pilot
 
+    # -- task bodies (cooperative; interpreted by the strategy) ---------------
+
+    def _producer_body(self, ctx: TaskContext, state: _RunState,
+                       device_idx: int, count: int):
+        """One edge device: generate → [process_edge] → broker, ``count``
+        times. ``Service("produce")`` charges the strategy's per-message
+        generation + edge-stage cost (zero unless a service model is set)."""
+        topic = state.topic
+        for _ in range(count):
+            if state.stop.is_set():
+                return
+            produce = self._fn("produce")
+            data = produce(ctx)
+            pe = self._fn("process_edge")
+            if pe is not None:
+                data = pe(ctx, data=data)
+            yield Service("produce", data)
+            if state.stop.is_set():
+                return
+            topic.produce(data, partition=device_idx % self.n_partitions)
+            ctx.heartbeat()
+
+    def _consumer_body(self, ctx: TaskContext, state: _RunState, cid: str):
+        """One cloud consumer: join the group, then poll → dedup →
+        process → commit until the run stops or goes idle. The broker is
+        at-least-once across rebalances; dedup by msg_id gives
+        exactly-once *effect* at the application layer."""
+        group = state.group
+        group.join(cid)
+        clock = ctx.clock
+        idle_deadline = clock.now() + state.timeout_s
+        while not state.stop.is_set():
+            msg = yield Poll(group, cid, timeout_s=0.2,
+                             wake_at=idle_deadline)
+            if msg is None:
+                if (state.n_processed >= state.n_messages
+                        or clock.now() >= idle_deadline):
+                    return
+                continue
+            idle_deadline = clock.now() + state.timeout_s
+            with state.lock:
+                dup = msg.msg_id in state.seen_ids
+                state.seen_ids.add(msg.msg_id)     # reserve
+            if dup:
+                group.commit(msg)
+                self.metrics.incr("pipeline.duplicates_dropped")
+                continue
+            inflight_key = (cid, ctx.attempt)
+            state.inflight[inflight_key] = msg.msg_id
+            try:
+                data = msg.value()
+                yield Service("process_cloud", data)
+                fn = self._fn("process_cloud")
+                out = fn(ctx, data=data)
+            except BaseException:
+                # release the dedup reservation so the redelivery (from
+                # this task's retry or a rebalance) is processed, then let
+                # the strategy's retry machinery handle the failure.
+                with state.lock:
+                    state.seen_ids.discard(msg.msg_id)
+                state.inflight.pop(inflight_key, None)
+                raise
+            self.metrics.stamp(msg.msg_id, "processed", bytes=msg.nbytes)
+            group.commit(msg)
+            state.inflight.pop(inflight_key, None)
+            with state.lock:
+                state.n_processed += 1
+                if state.collect:
+                    state.results.append(out)
+                if (state.n_processed >= state.n_messages
+                        and state.t_done is None):
+                    state.t_done = clock.now()
+                    state.stop.set()
+            state.processed_sem.release()
+            ctx.heartbeat()
+
     # -- run -------------------------------------------------------------------
 
-    def run(self, n_messages: int = 512,
-            timeout_s: float = 600.0,
-            collect_results: bool = True) -> PipelineResult:
-        """Drive ``n_messages`` end-to-end (the paper sends 512 per run)."""
-        t0 = self._clock.now()
-        self._stop.clear()
+    def _setup_run(self, n_messages: int, timeout_s: float,
+                   collect_results: bool) -> _RunState:
+        """Create the per-run topic/group/state (called by the strategy)."""
         # run-counter suffix, not a wall-time suffix: virtual runs restart
         # the clock at 0 and must not collide on topic names
         topic = self.broker.create_topic(
             f"{self.topic_name}-{next(_run_ids)}",
             n_partitions=self.n_partitions, shaper=self.wan_shaper)
-        self._topic = topic
-
-        edge_rt = TaskRuntime(self.pilot_edge, self.metrics,
-                              **self._runtime_kw)
-        cloud_rt = TaskRuntime(self.pilot_cloud, self.metrics,
-                               **self._runtime_kw)
         group = ConsumerGroup(topic, group_id="cloud-processing")
-        results: List[Any] = []
-        results_lock = threading.Lock()
-        processed = threading.Semaphore(0)
-        n_processed = [0]
-        seen_ids: set = set()   # idempotent processing: the broker is
-        # at-least-once across rebalances; dedup by msg_id gives
-        # exactly-once *effect* at the application layer.
-
-        # --- edge producers: one per edge device, pinned to its partition ---
-        per_device = [n_messages // self.n_edge_devices] * self.n_edge_devices
+        # paper: messages split across devices, one partition per device
+        per_device = ([n_messages // self.n_edge_devices]
+                      * self.n_edge_devices)
         for i in range(n_messages % self.n_edge_devices):
             per_device[i] += 1
+        self._topic = topic
+        self._group = group
+        return _RunState(topic=topic, group=group, per_device=per_device,
+                         n_messages=n_messages, timeout_s=timeout_s,
+                         collect=collect_results)
 
-        def edge_producer(ctx: TaskContext, device_idx: int, count: int):
-            for _ in range(count):
-                if self._stop.is_set():
-                    return
-                produce = self._fn("produce")
-                data = produce(ctx)
-                pe = self._fn("process_edge")
-                if pe is not None:
-                    data = pe(ctx, data=data)
-                topic.produce(
-                    data, partition=device_idx % self.n_partitions)
-                ctx.heartbeat()
-
-        producer_futs = [
-            edge_rt.submit(edge_producer, i, per_device[i])
-            for i in range(self.n_edge_devices)]
-
-        # --- cloud consumers ---
-        def cloud_consumer(ctx: TaskContext, consumer_idx: int):
-            cid = f"consumer-{consumer_idx}"
-            group.join(cid)
-            idle_deadline = self._clock.now() + timeout_s
-            while not self._stop.is_set():
-                msg = group.poll(cid, timeout_s=0.2)
-                if msg is None:
-                    if (n_processed[0] >= n_messages
-                            or self._clock.now() > idle_deadline):
-                        return
-                    continue
-                idle_deadline = self._clock.now() + timeout_s
-                with results_lock:
-                    dup = msg.msg_id in seen_ids
-                    seen_ids.add(msg.msg_id)     # reserve
-                if dup:
-                    group.commit(msg)
-                    self.metrics.incr("pipeline.duplicates_dropped")
-                    continue
-                try:
-                    data = msg.value()
-                    fn = self._fn("process_cloud")
-                    out = fn(ctx, data=data)
-                except BaseException:
-                    # release the dedup reservation so the redelivery (from
-                    # this task's retry) is processed, then let the runtime's
-                    # retry machinery handle the task failure.
-                    with results_lock:
-                        seen_ids.discard(msg.msg_id)
-                    raise
-                self.metrics.stamp(msg.msg_id, "processed",
-                                   bytes=msg.nbytes)
-                group.commit(msg)
-                with results_lock:
-                    n_processed[0] += 1
-                    if collect_results:
-                        results.append(out)
-                processed.release()
-                ctx.heartbeat()
-
-        consumer_futs = [
-            cloud_rt.submit(cloud_consumer, i)
-            for i in range(self.cloud_consumers)]
-
-        # --- wait for completion ---
-        # the semaphore wait is real (worker threads are real) but the
-        # deadline is measured on the injected clock; with a virtual clock
-        # the real wait must stay short so deadline advances (driven from
-        # another thread) are observed promptly
-        deadline = self._clock.now() + timeout_s
-        remaining = n_messages
-        while remaining > 0:
-            wait_s = min(deadline - self._clock.now(), timeout_s)
-            if self._clock.virtual:
-                wait_s = min(wait_s, 0.05)
-            if processed.acquire(timeout=max(wait_s, 0.01)):
-                remaining -= 1
-            elif self._clock.now() >= deadline:
-                break
-        self._stop.set()
-        wall = self._clock.now() - t0       # before any shutdown nudging
-        for f in producer_futs + consumer_futs:
-            # with a manual virtual clock, workers may be parked inside
-            # clock.sleep waiting for time the external driver will never
-            # provide once the run is over — tick the clock while joining
-            # so their poll loops observe _stop and exit
-            for _ in range(1000):           # ~10 s real bound per future
-                if self._clock.virtual:
-                    self._clock.advance(0.01)
-                try:
-                    f.result(timeout=0.01)
-                    break
-                except TimeoutError:
-                    continue
-                except Exception:   # noqa: BLE001 — task errors already counted
-                    break
-        edge_rt.shutdown(wait=False)
-        cloud_rt.shutdown(wait=False)
+    def _finish(self, state: _RunState, wall_s: float) -> PipelineResult:
+        self._group = None        # current_lag() reads 0 between runs
         n_prod = int(self.metrics.counter(
-            f"topic.{topic.name}.msgs_in"))
-        return PipelineResult(results=results, metrics=self.metrics,
+            f"topic.{state.topic.name}.msgs_in"))
+        return PipelineResult(results=state.results, metrics=self.metrics,
                               n_produced=n_prod,
-                              n_processed=n_processed[0], wall_s=wall)
+                              n_processed=state.n_processed, wall_s=wall_s)
+
+    def run(self, n_messages: int = 512,
+            timeout_s: float = 600.0,
+            collect_results: bool = True,
+            scheduler=None) -> PipelineResult:
+        """Drive ``n_messages`` end-to-end (the paper sends 512 per run).
+
+        ``scheduler`` selects the execution strategy:
+        :class:`~repro.core.executor.ThreadedExecutor` (default — real
+        threads) or :class:`~repro.core.executor.SimExecutor`
+        (single-threaded virtual time, bit-reproducible metrics).
+        """
+        strategy = scheduler if scheduler is not None else ThreadedExecutor()
+        return strategy.run(self, n_messages=n_messages,
+                            timeout_s=timeout_s,
+                            collect_results=collect_results)

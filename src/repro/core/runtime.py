@@ -21,6 +21,7 @@ unit is the whole task, not a shard. Mesh pilots therefore run tasks serially
 """
 from __future__ import annotations
 
+import inspect
 import itertools
 import statistics
 import threading
@@ -110,9 +111,16 @@ class TaskRuntime:
                  heartbeat_timeout_s: float = 30.0,
                  speculative_factor: float = 0.0,
                  monitor_interval_s: float = 0.05,
-                 clock: Optional[Clock] = None):
+                 clock: Optional[Clock] = None,
+                 interpreter: Optional[Callable[["TaskContext", Any],
+                                                Any]] = None):
         self.pilot = pilot
         self._clock = as_clock(clock)
+        # cooperative task bodies: a submitted generator function is driven
+        # to completion on the worker thread, its yielded effects resolved
+        # by ``interpreter`` (numbers are always interpreted as clock
+        # sleeps). The same bodies run as DES actors under SimExecutor.
+        self.interpreter = interpreter
         self.metrics = metrics or MetricsRegistry(clock=self._clock)
         self.max_retries = max_retries
         self.heartbeat_timeout_s = heartbeat_timeout_s
@@ -179,6 +187,8 @@ class TaskRuntime:
                 _heartbeat=lambda: self._beat(att))
             try:
                 result = rec["fn"](ctx, *rec["args"], **rec["kwargs"])
+                if inspect.isgenerator(result):
+                    result = self._drive(ctx, result)
             except BaseException as e:  # noqa: BLE001 — retried below
                 att.done = True
                 self._on_attempt_error(task_id, rec, e)
@@ -195,6 +205,27 @@ class TaskRuntime:
                     self._inflight.pop(task_id, None)
 
         self._pool.submit(run)
+
+    def _drive(self, ctx: TaskContext, gen) -> Any:
+        """Blocking interpretation of a cooperative task body: numbers are
+        clock sleeps, everything else goes through ``self.interpreter``
+        (the thread-strategy counterpart of a DES actor step)."""
+        try:
+            eff = next(gen)
+            while True:
+                if eff is None:
+                    val = None
+                elif isinstance(eff, (int, float)):
+                    self._clock.sleep(max(float(eff), 0.0))
+                    val = None
+                elif self.interpreter is not None:
+                    val = self.interpreter(ctx, eff)
+                else:
+                    raise TypeError(f"task {ctx.task_id} yielded {eff!r} "
+                                    f"but the runtime has no interpreter")
+                eff = gen.send(val)
+        except StopIteration as s:
+            return getattr(s, "value", None)
 
     def _beat(self, att: _Attempt) -> None:
         att.last_beat = self._clock.now()

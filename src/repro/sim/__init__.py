@@ -23,18 +23,25 @@ package provides the three pieces that make that possible here:
 """
 from repro.sim.clock import (SYSTEM_CLOCK, Clock, SimClock, SystemClock,
                              as_clock)
-from repro.sim.scheduler import EventScheduler
+from repro.sim.scheduler import PARK, Actor, ActorKilled, EventScheduler
 
 _SCENARIO_NAMES = ("ModelSpec", "Scenario", "ScenarioResult", "FailureSpec",
                    "WAN_BANDS", "KMEANS", "AUTOENCODER", "MODELS",
                    "PLACEMENTS", "run_scenario", "sweep", "format_table")
+# SimExecutor lives in repro.core.executor (it drives the real pipeline);
+# re-exported here lazily because repro.core imports repro.sim.clock.
+_EXECUTOR_NAMES = ("SimExecutor", "ThreadedExecutor")
 
 __all__ = ["Clock", "SystemClock", "SimClock", "SYSTEM_CLOCK", "as_clock",
-           "EventScheduler", *_SCENARIO_NAMES]
+           "EventScheduler", "Actor", "ActorKilled", "PARK",
+           *_EXECUTOR_NAMES, *_SCENARIO_NAMES]
 
 
 def __getattr__(name):
     if name in _SCENARIO_NAMES:
         from repro.sim import scenarios
         return getattr(scenarios, name)
+    if name in _EXECUTOR_NAMES:
+        from repro.core import executor
+        return getattr(executor, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,16 +1,16 @@
-"""Fig-3 scenario harness: emulated edge-to-cloud pipeline runs.
+"""Fig-3 scenarios: emulated edge-to-cloud pipeline runs — on the *real*
+pipeline.
 
-Replays a full geo-distributed pipeline — Mini-App producers on edge
-devices, the partitioned broker with a WAN-shaped intercontinental hop,
-consumer-group processing on the chosen tier, consumer crashes and
-rebalances — as a single-threaded discrete-event simulation over
-:class:`~repro.sim.clock.SimClock`.  The *real* framework objects carry the
-dataflow (``Broker``/``Topic``/``ConsumerGroup``/``WanShaper``/
-``MetricsRegistry``), so broker offsets, at-least-once redelivery, byte
-accounting and linked metrics are the production code paths, only time is
-virtual.  A sweep of {model} × {placement} × {WAN band} that takes hours
-of real pipeline time (paper Fig 2/3) replays in milliseconds with
-bit-reproducible metrics.
+Each scenario builds a genuine :class:`~repro.core.faas.EdgeToCloudPipeline`
+(real ``Broker``/``Topic``/``ConsumerGroup``/``WanShaper``/
+``MetricsRegistry``/pilots) and runs it with
+``run(scheduler=SimExecutor(...))`` — the single-threaded discrete-event
+strategy from :mod:`repro.core.executor`.  There is no harness replica of
+the pipeline logic any more: broker offsets, at-least-once redelivery,
+dedup, byte accounting, consumer-group rebalances and linked metrics are
+the production code paths, only time is virtual.  A sweep of {model} ×
+{placement} × {WAN band} that takes hours of real pipeline time (paper
+Fig 2/3) replays in milliseconds with bit-reproducible metrics.
 
 Placement modalities (the paper's deployment modalities, §II-C):
 
@@ -20,27 +20,35 @@ Placement modalities (the paper's deployment modalities, §II-C):
 * ``hybrid`` — an edge pre-aggregation stage shrinks each message by
   ``hybrid_reduce`` before the WAN hop; the model finishes on the cloud.
 
-Cost model: compute time = task FLOPs / tier FLOP/s with the same
-``EDGE_FLOPS`` / ``DEVICE_FLOPS`` constants the :class:`PlacementEngine`
-prices placements with, so emulated throughput and the engine's
-``compare_tiers`` estimates are mutually consistent (tested in
-``tests/test_sim.py``).
+Cost model: the scenario's *service model* prices the produce and cloud
+stages from task FLOPs / tier FLOP/s with the same ``EDGE_FLOPS`` /
+``DEVICE_FLOPS`` constants the :class:`PlacementEngine` uses, so emulated
+throughput and the engine's ``compare_tiers`` estimates are mutually
+consistent (tested in ``tests/test_sim.py``).
+
+Dynamism scenarios: ``failures`` injects consumer crashes (or silent node
+loss the heartbeat monitor must detect) mid-run; ``autoscale`` attaches a
+lag-driven :class:`~repro.core.elastic.AutoScaler` to the consuming pilot,
+stepped inside the DES, with the consumer pool following its resizes.
 """
 from __future__ import annotations
 
 import time as _walltime
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.broker import Broker, ConsumerGroup, WanShaper
+from repro.core.broker import WanShaper
+from repro.core.elastic import AutoScaler, ScalePolicy
+from repro.core.executor import SimExecutor
+from repro.core.faas import EdgeToCloudPipeline
 from repro.core.monitoring import MetricsRegistry
+from repro.core.pilot import ComputeResource, PilotManager
 from repro.core.placement import (DEVICE_FLOPS, EDGE_FLOPS, LinkModel,
                                   PlacementEngine, TaskProfile)
 from repro.ml.datagen import N_FEATURES, message_nbytes
 from repro.sim.clock import SimClock
-from repro.sim.scheduler import EventScheduler
 
 # the paper's iPerf band plus the constrained 10 Mbit/s point used for the
 # placement-sensitivity experiments; (bandwidth bits/s, RTT seconds)
@@ -89,10 +97,13 @@ MODELS: Dict[str, ModelSpec] = {m.name: m for m in (KMEANS, AUTOENCODER)}
 class FailureSpec:
     """Crash consumer ``consumer_idx`` at virtual time ``at_s``; a
     replacement (fresh member id, resuming from committed offsets) joins
-    ``restart_after_s`` later unless None."""
+    ``restart_after_s`` later unless None.  ``kind="crash"`` raises inside
+    the consumer (immediate rebalance); ``kind="silent"`` makes the node
+    go dark so only the heartbeat monitor can detect the loss."""
     at_s: float
     consumer_idx: int = 0
     restart_after_s: Optional[float] = 1.0
+    kind: str = "crash"             # crash | silent
 
 
 @dataclass(frozen=True)
@@ -106,12 +117,15 @@ class Scenario:
     n_points: int = 2_500                     # points per message
     gen_s_per_point: float = 2e-6             # Mini-App generation cost
     failures: Tuple[FailureSpec, ...] = ()
+    autoscale: Optional[ScalePolicy] = None   # lag-driven resize in the DES
+    autoscale_interval_s: float = 0.2
     seed: int = 0
     t_max_s: float = 36_000.0                 # virtual-time safety cap
 
     def label(self) -> str:
         return (f"{self.model.name}/{self.placement}/{self.wan_band}"
-                f"{'/fail' if self.failures else ''}")
+                f"{'/fail' if self.failures else ''}"
+                f"{'/autoscale' if self.autoscale else ''}")
 
 
 @dataclass
@@ -125,6 +139,7 @@ class ScenarioResult:
     latency_p95_s: float
     wan_mbytes: float
     placement_estimates: Dict[str, float]     # PlacementEngine per-tier est.
+    autoscale_events: List[dict] = field(default_factory=list)
     wall_ms: float = 0.0              # real milliseconds spent emulating
     metrics: MetricsRegistry = field(default=None, repr=False)
 
@@ -141,6 +156,7 @@ class ScenarioResult:
             "lat_mean_s": self.latency_mean_s,
             "lat_p95_s": self.latency_p95_s,
             "wan_mb": self.wan_mbytes,
+            "autoscale_actions": len(self.autoscale_events),
         }
 
 
@@ -176,10 +192,24 @@ def _payload(sc: Scenario) -> np.ndarray:
     return np.zeros((sc.n_points, N_FEATURES), np.float64)
 
 
+def _service_model(sc: Scenario):
+    """Stage → virtual service seconds, priced like the PlacementEngine."""
+    produce_s = sc.gen_s_per_point * sc.n_points + _edge_compute_s(sc)
+    cloud_s = _cloud_compute_s(sc)
+
+    def model(stage, ctx, payload):
+        if stage == "produce":
+            return produce_s
+        if stage == "process_cloud":
+            return cloud_s
+        return 0.0
+
+    return model
+
+
 def placement_estimates(sc: Scenario) -> Dict[str, float]:
     """PlacementEngine per-tier completion-time estimates for one message
     of this scenario, priced over this scenario's WAN band."""
-    from repro.core.pilot import ComputeResource, PilotManager
     bw_bps, rtt = WAN_BANDS[sc.wan_band]
     links = {("edge", "cloud"): LinkModel(bandwidth=bw_bps / 8.0,
                                           latency_s=rtt),
@@ -196,152 +226,87 @@ def placement_estimates(sc: Scenario) -> Dict[str, float]:
                              [edge, cloud])
 
 
-class _Sim:
-    """One scenario's event-driven pipeline state."""
-
-    def __init__(self, sc: Scenario):
-        if sc.wan_band not in WAN_BANDS:
-            raise ValueError(f"unknown wan_band {sc.wan_band!r}; "
-                             f"known: {sorted(WAN_BANDS)}")
-        self.sc = sc
-        self.clock = SimClock()
-        self.sched = EventScheduler(self.clock)
-        self.metrics = MetricsRegistry(clock=self.clock)
-        self.broker = Broker(metrics=self.metrics, clock=self.clock)
-        bw_bps, rtt = WAN_BANDS[sc.wan_band]
-        self.shaper = WanShaper(bandwidth_bps=bw_bps, rtt_s=rtt, sleep=False)
-        self.topic = self.broker.create_topic(
-            "e2c", n_partitions=sc.n_devices, shaper=self.shaper)
-        self.group = ConsumerGroup(self.topic, "cloud-processing")
-        self.rng = np.random.default_rng(sc.seed)
-        self.n_consumers = sc.n_consumers or sc.n_devices
-        self.alive: Dict[str, bool] = {}
-        self.produced = 0
-        self.seen_ids: set = set()
-        self.duplicates = 0
-        self.done = False
-        self.t_edge = _edge_compute_s(sc)
-        self.t_cloud = _cloud_compute_s(sc)
-        self.gen_s = sc.gen_s_per_point * sc.n_points
-        # per-device message budget (paper: messages split across devices)
-        base, extra = divmod(sc.n_messages, sc.n_devices)
-        self.per_device = [base + (1 if i < extra else 0)
-                           for i in range(sc.n_devices)]
-
-    # -- edge side ---------------------------------------------------------
-
-    def start(self) -> None:
-        for d in range(self.sc.n_devices):
-            if self.per_device[d]:
-                # deterministic per-device phase offset (devices don't boot
-                # in lockstep); drawn in device order from the seeded rng
-                offset = float(self.rng.uniform(0.0, self.gen_s + 1e-9))
-                self.sched.at(offset, lambda d=d: self._device_step(d))
-        for c in range(self.n_consumers):
-            cid = f"consumer-{c}"
-            self.alive[cid] = True
-            self.group.join(cid)
-            self.sched.at(0.0, lambda cid=cid: self._consumer_poll(cid))
-        for f in self.sc.failures:
-            self.sched.at(f.at_s, lambda f=f: self._crash(f))
-
-    def _device_step(self, d: int) -> None:
-        if self.per_device[d] <= 0 or self.done:
-            return
-        # generate, run the edge stage, then hand to the broker
-        self.sched.after(self.gen_s + self.t_edge,
-                         lambda: self._device_produce(d))
-
-    def _device_produce(self, d: int) -> None:
-        if self.done:
-            return
-        self.per_device[d] -= 1
-        self.produced += 1
-        self.topic.produce(_payload(self.sc), partition=d)
-        self._device_step(d)
-
-    # -- cloud side --------------------------------------------------------
-
-    def _consumer_poll(self, cid: str) -> None:
-        if self.done or not self.alive.get(cid, False):
-            return
-        msg, ready = self.group.poll_nowait(cid)
-        if msg is None:
-            now = self.clock.now()
-            # in-flight WAN messages have an exact wakeup; otherwise idle-
-            # tick (coarse is fine: a streaming consumer re-polls straight
-            # from _consumer_done, never through this path)
-            retry = ready if ready is not None else now + 0.05
-            self.sched.at(max(retry, now), lambda: self._consumer_poll(cid))
-            return
-        self.sched.after(self.t_cloud,
-                         lambda: self._consumer_done(cid, msg))
-
-    def _consumer_done(self, cid: str, msg) -> None:
-        if not self.alive.get(cid, False):
-            return                      # crashed mid-service: no commit
-        self.group.commit(msg)
-        if msg.msg_id in self.seen_ids:
-            self.duplicates += 1
-            self.metrics.incr("sim.duplicates")
-        else:
-            self.seen_ids.add(msg.msg_id)
-            self.metrics.stamp(msg.msg_id, "processed", bytes=msg.nbytes)
-        if (len(self.seen_ids) >= self.sc.n_messages
-                and self.produced >= self.sc.n_messages):
-            self.done = True
-            return
-        self._consumer_poll(cid)
-
-    # -- failures ----------------------------------------------------------
-
-    def _crash(self, f: FailureSpec) -> None:
-        cid = f"consumer-{f.consumer_idx}"
-        if not self.alive.get(cid, False):
-            return
-        self.alive[cid] = False
-        self.group.leave(cid)           # rebalance; uncommitted redeliver
-        self.metrics.event("consumer_crashed", consumer=cid)
-        if f.restart_after_s is not None:
-            new_cid = f"{cid}-r"
-            self.sched.after(f.restart_after_s,
-                             lambda: self._restart(new_cid))
-
-    def _restart(self, cid: str) -> None:
-        self.alive[cid] = True
-        self.group.join(cid)
-        self.metrics.event("consumer_restarted", consumer=cid)
-        self._consumer_poll(cid)
+def build_pipeline(sc: Scenario):
+    """Construct the genuine pipeline + SimExecutor for one scenario.
+    Returns ``(pipeline, executor, manager)`` — run with
+    ``pipeline.run(n_messages=sc.n_messages, scheduler=executor)``."""
+    if sc.placement not in PLACEMENTS:
+        raise ValueError(f"placement must be one of {PLACEMENTS}")
+    if sc.wan_band not in WAN_BANDS:
+        raise ValueError(f"unknown wan_band {sc.wan_band!r}; "
+                         f"known: {sorted(WAN_BANDS)}")
+    clock = SimClock()
+    metrics = MetricsRegistry(clock=clock)
+    mgr = PilotManager(devices=(), clock=clock)
+    edge = mgr.submit_pilot(ComputeResource(tier="edge",
+                                            n_workers=sc.n_devices))
+    n_cons = sc.n_consumers or sc.n_devices
+    cloud = mgr.submit_pilot(ComputeResource(tier="cloud",
+                                             n_workers=n_cons))
+    bw_bps, rtt = WAN_BANDS[sc.wan_band]
+    payload = _payload(sc)
+    pipe = EdgeToCloudPipeline(
+        pilot_cloud_processing=cloud, pilot_edge=edge,
+        produce_function_handler=lambda ctx: payload,
+        process_cloud_function_handler=lambda ctx, data=None: None,
+        n_edge_devices=sc.n_devices, n_partitions=sc.n_devices,
+        cloud_consumers=n_cons, topic_name="e2c",
+        wan_shaper=WanShaper(bandwidth_bps=bw_bps, rtt_s=rtt, sleep=False),
+        metrics=metrics, clock=clock,
+        # service times are priced by the service model, not heartbeats;
+        # only explicit "silent" failure injection should trip the monitor
+        heartbeat_timeout_s=(30.0 if any(f.kind == "silent"
+                                         for f in sc.failures)
+                             else sc.t_max_s))
+    scaler = None
+    if sc.autoscale is not None:
+        scaler = AutoScaler(mgr, cloud, lag_fn=pipe.current_lag,
+                            policy=sc.autoscale, metrics=metrics,
+                            interval_s=sc.autoscale_interval_s, clock=clock)
+    # deterministic per-device phase offsets (devices don't boot in
+    # lockstep), drawn in device order from the seeded rng
+    rng = np.random.default_rng(sc.seed)
+    gen_s = sc.gen_s_per_point * sc.n_points
+    offsets = [float(rng.uniform(0.0, gen_s + 1e-9))
+               for _ in range(sc.n_devices)]
+    ex = SimExecutor(clock=clock, service_model=_service_model(sc),
+                     producer_offsets=offsets, crash_plan=sc.failures,
+                     autoscaler=scaler,
+                     autoscale_interval_s=sc.autoscale_interval_s)
+    return pipe, ex, mgr
 
 
 def run_scenario(sc: Scenario) -> ScenarioResult:
-    """Emulate one scenario to completion; returns deterministic metrics."""
-    if sc.placement not in PLACEMENTS:
-        raise ValueError(f"placement must be one of {PLACEMENTS}")
+    """Emulate one scenario to completion on the real pipeline; returns
+    deterministic metrics."""
     t_wall = _walltime.perf_counter()
-    sim = _Sim(sc)
-    sim.start()
-    sim.sched.run(until=sc.t_max_s, max_events=5_000_000)
+    pipe, ex, _ = build_pipeline(sc)
+    res = pipe.run(n_messages=sc.n_messages, timeout_s=sc.t_max_s,
+                   collect_results=False, scheduler=ex)
+    metrics = res.metrics
 
-    lat = sim.metrics.latencies("produced", "processed")
+    lat = metrics.latencies("produced", "processed")
     lat.sort()
-    first = sim.metrics.first_stamp("produced") or 0.0
-    last = sim.metrics.last_stamp("processed") or 0.0
+    first = metrics.first_stamp("produced") or 0.0
+    last = metrics.last_stamp("processed") or 0.0
     makespan = max(last - first, 1e-9)
-    n_done = len(sim.seen_ids)
+    n_done = res.n_processed
+    scaler = ex.autoscaler
     return ScenarioResult(
         scenario=sc,
         n_processed=n_done,
-        n_duplicates=sim.duplicates,
+        n_duplicates=int(metrics.counter("pipeline.duplicates_dropped")),
         makespan_s=makespan,
         throughput_msgs_s=n_done / makespan,
         latency_mean_s=float(np.mean(lat)) if lat else 0.0,
         latency_p95_s=lat[min(len(lat) - 1, int(0.95 * len(lat)))]
         if lat else 0.0,
-        wan_mbytes=sim.metrics.counter("topic.e2c.bytes_in") / 1e6,
+        wan_mbytes=metrics.counter(
+            f"topic.{pipe._topic.name}.bytes_in") / 1e6,
         placement_estimates=placement_estimates(sc),
+        autoscale_events=list(scaler.history) if scaler else [],
         wall_ms=(_walltime.perf_counter() - t_wall) * 1e3,
-        metrics=sim.metrics)
+        metrics=metrics)
 
 
 def sweep(models: Sequence[ModelSpec] = (KMEANS, AUTOENCODER),

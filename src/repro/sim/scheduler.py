@@ -5,10 +5,23 @@ earliest event, jumps the virtual clock to its timestamp, and executes it.
 ``seq`` (insertion order) breaks time ties, so a run is a pure function of
 the scenario + seed — the bit-reproducibility the emulator is built on.
 
-Events are plain callbacks (not coroutines): handlers schedule follow-up
-events, which keeps the whole machine single-threaded and deterministic
-while reusing the *real* broker / metrics / placement objects under
-virtual time.
+Events are plain callbacks: handlers schedule follow-up events, which keeps
+the whole machine single-threaded and deterministic while reusing the
+*real* broker / metrics / placement objects under virtual time.
+
+On top of the callback loop sits a cooperative-actor layer
+(:class:`Actor`, :meth:`EventScheduler.spawn`): a Python generator is
+driven as a DES process. Each ``yield`` suspends the actor —
+
+* ``yield <seconds>`` resumes it that much virtual time later,
+* ``yield PARK`` parks it until an external ``resume``/``throw``,
+* any other yielded value is handed to the spawner's ``interpret``
+  callback (the execution strategy's effect vocabulary — e.g. the
+  pipeline executors' ``Poll``/``Service`` effects).
+
+This is how the *genuine* ``EdgeToCloudPipeline`` task loops run inside
+the DES: the same generator bodies that thread executors drive with
+blocking calls are spawned here as deterministic single-threaded actors.
 """
 from __future__ import annotations
 
@@ -92,3 +105,131 @@ class EventScheduler:
     def step(self) -> bool:
         """Execute exactly the next pending event. Returns False if none."""
         return self.run(max_events=1) == 1
+
+    # -- actors ------------------------------------------------------------
+
+    def spawn(self, gen, *, name: str = "actor",
+              at: Optional[float] = None,
+              interpret: Optional[Callable[["Actor", Any], None]] = None,
+              on_exit: Optional[Callable[["Actor", Optional[BaseException],
+                                          Any], None]] = None) -> "Actor":
+        """Drive generator ``gen`` as a cooperative DES actor, starting at
+        virtual time ``at`` (default: now)."""
+        actor = Actor(self, gen, name=name, interpret=interpret,
+                      on_exit=on_exit)
+        actor._schedule_step(self.clock.now() if at is None else at)
+        return actor
+
+
+# sentinel: an actor yielding PARK (or None) suspends until an external
+# resume()/throw()
+PARK = object()
+
+
+class ActorKilled(Exception):
+    """Injected termination (crash/rebalance injection mid-run)."""
+
+
+class Actor:
+    """A generator driven by the scheduler as a DES process.
+
+    The generator communicates by yielding: a number (sleep that many
+    virtual seconds), :data:`PARK`/``None`` (suspend until ``resume``), or
+    an arbitrary effect object handed to ``interpret`` (which must
+    eventually ``resume``/``throw``/``kill`` the actor). ``on_exit`` fires
+    exactly once with ``(actor, exception_or_None, return_value)``.
+    """
+
+    def __init__(self, sched: EventScheduler, gen, *, name: str = "actor",
+                 interpret=None, on_exit=None):
+        self.sched = sched
+        self.gen = gen
+        self.name = name
+        self.interpret = interpret
+        self.on_exit = on_exit
+        self.alive = True
+        self.parked = False
+        self._pending: Optional[_Event] = None
+
+    # -- external control --------------------------------------------------
+
+    def resume(self, payload: Any = None, delay: float = 0.0) -> None:
+        """Wake the actor with ``payload`` after ``delay`` virtual seconds
+        (cancels any pending wakeup)."""
+        if not self.alive:
+            return
+        self.parked = False
+        self._schedule_step(self.sched.clock.now() + max(delay, 0.0),
+                            payload=payload)
+
+    def throw(self, exc: BaseException) -> None:
+        """Deliver ``exc`` into the generator at its suspension point."""
+        if not self.alive:
+            return
+        self.parked = False
+        self._schedule_step(self.sched.clock.now(), exc=exc)
+
+    def kill(self, exc: Optional[BaseException] = None) -> None:
+        """Crash injection: raise :class:`ActorKilled` inside the actor."""
+        self.throw(exc if exc is not None else ActorKilled(self.name))
+
+    def drop(self) -> None:
+        """Silent failure: stop driving the actor *without* running any
+        cleanup or ``on_exit`` — the process just goes dark (the way a lost
+        node does). Failure detection (heartbeat monitors) must notice."""
+        self.alive = False
+        self.parked = False
+        self._cancel_pending()
+
+    # -- machinery ---------------------------------------------------------
+
+    def _cancel_pending(self) -> None:
+        if self._pending is not None:
+            self._pending.cancel()
+            self._pending = None
+
+    def _schedule_step(self, t: float, payload: Any = None,
+                       exc: Optional[BaseException] = None) -> None:
+        if not self.alive:
+            return
+        self._cancel_pending()
+        self._pending = self.sched.at(
+            t, lambda: self._step(payload, exc))
+
+    def _step(self, payload: Any, exc: Optional[BaseException]) -> None:
+        self._pending = None
+        if not self.alive:
+            return
+        try:
+            if exc is not None:
+                eff = self.gen.throw(exc)
+            else:
+                eff = self.gen.send(payload)
+        except StopIteration as s:
+            self._finish(None, getattr(s, "value", None))
+            return
+        except BaseException as e:  # noqa: BLE001 — routed to on_exit
+            self._finish(e, None)
+            return
+        self._dispatch(eff)
+
+    def _dispatch(self, eff: Any) -> None:
+        if eff is PARK or eff is None:
+            self.parked = True
+            return
+        if isinstance(eff, (int, float)):
+            self._schedule_step(self.sched.clock.now() + max(float(eff), 0.0))
+            return
+        if self.interpret is not None:
+            self.interpret(self, eff)
+            return
+        self._finish(TypeError(f"actor {self.name!r} yielded {eff!r} "
+                               f"with no interpreter"), None)
+
+    def _finish(self, exc: Optional[BaseException], result: Any) -> None:
+        self.alive = False
+        self.parked = False
+        self._cancel_pending()
+        self.gen.close()
+        if self.on_exit is not None:
+            self.on_exit(self, exc, result)

@@ -395,9 +395,22 @@ def test_pipeline_runs_under_manual_simclock():
     assert res.metrics.summary()["count"] == 20
 
 
-def test_pipeline_rejects_auto_advance_clock():
+def test_threaded_run_rejects_auto_advance_clock():
+    """Auto-advance virtual time belongs to SimExecutor; the threaded
+    strategy (the default) refuses it at run time."""
+    pipe = _mini_pipeline(clock=SimClock())      # construction is fine now
     with pytest.raises(ValueError):
-        _mini_pipeline(clock=SimClock())
+        pipe.run(n_messages=4)
+
+
+def test_sim_executor_requires_pipeline_clock():
+    from repro.core import SimExecutor
+    pipe = _mini_pipeline(clock=SimClock())
+    with pytest.raises(ValueError):
+        pipe.run(n_messages=4, scheduler=SimExecutor(clock=SimClock()))
+    # and a wall-clock pipeline can't adopt a DES strategy
+    with pytest.raises(ValueError):
+        _mini_pipeline().run(n_messages=4, scheduler=SimExecutor())
 
 
 def test_pipeline_wan_accounting():

@@ -1,0 +1,259 @@
+"""DES-native pipeline execution: the *genuine* EdgeToCloudPipeline under
+``run(scheduler=SimExecutor(...))`` — determinism across repeated runs,
+event-driven (non-polling) consumers, WAN visibility, crash + silent node
+loss with heartbeat detection, and the lag-driven autoscaler in the loop."""
+import numpy as np
+
+from repro.core import (ComputeResource, EdgeToCloudPipeline,
+                        MetricsRegistry, PilotManager, ScalePolicy,
+                        SimClock, SimExecutor, WanShaper)
+from repro.core.elastic import AutoScaler
+from repro.sim.scenarios import (AUTOENCODER, KMEANS, FailureSpec, Scenario,
+                                 build_pipeline, run_scenario)
+
+
+def _des_pipeline(n_devices=2, n_messages=20, *, service_model=None,
+                  wan_shaper=None, cloud_consumers=None,
+                  heartbeat_timeout_s=1e9, process=None, **exec_kw):
+    """A tiny real pipeline on an auto-advance SimClock + its executor."""
+    clock = SimClock()
+    metrics = MetricsRegistry(clock=clock)
+    mgr = PilotManager(devices=(), clock=clock)
+    edge = mgr.submit_pilot(ComputeResource(tier="edge",
+                                            n_workers=n_devices))
+    cloud = mgr.submit_pilot(ComputeResource(
+        tier="cloud", n_workers=cloud_consumers or n_devices))
+    payload = np.arange(64, dtype=np.float64)
+    pipe = EdgeToCloudPipeline(
+        pilot_cloud_processing=cloud, pilot_edge=edge,
+        produce_function_handler=lambda ctx: payload,
+        process_cloud_function_handler=(
+            process or (lambda ctx, data=None: float(np.sum(data)))),
+        n_edge_devices=n_devices, cloud_consumers=cloud_consumers,
+        wan_shaper=wan_shaper, metrics=metrics, clock=clock,
+        heartbeat_timeout_s=heartbeat_timeout_s)
+    ex = SimExecutor(clock=clock, service_model=service_model, **exec_kw)
+    return pipe, ex, mgr, clock
+
+
+def _fingerprint(res):
+    """Everything that must be bit-identical across repeated runs."""
+    lat = res.metrics.latencies("produced", "processed")
+    return (res.n_processed, res.n_produced, res.wall_s, tuple(sorted(lat)),
+            tuple((e["kind"], e["t"]) for e in res.metrics.events()
+                  if e["kind"].startswith(("consumer_", "autoscale"))))
+
+
+# ---------------------------------------------------------------------------
+# the acceptance gate: real pipeline, bit-identical across 3 runs
+# ---------------------------------------------------------------------------
+
+def test_real_pipeline_bit_identical_across_three_runs():
+    def one():
+        svc = lambda stage, ctx, data: 0.02 if stage == "produce" else 0.05
+        pipe, ex, _, _ = _des_pipeline(
+            n_devices=3, service_model=svc,
+            wan_shaper=WanShaper(bandwidth_bps=8e6, rtt_s=0.1, sleep=False))
+        return _fingerprint(
+            pipe.run(n_messages=30, timeout_s=600.0, scheduler=ex))
+
+    a, b, c = one(), one(), one()
+    assert a == b == c
+    assert a[0] == 30                        # all processed
+    assert a[2] > 0.0                        # virtual time actually passed
+
+
+def test_scenario_bit_identical_across_three_runs():
+    sc = Scenario(model=AUTOENCODER, placement="hybrid", wan_band="50mbit",
+                  n_messages=24, seed=3,
+                  failures=(FailureSpec(at_s=1.0, consumer_idx=0),))
+    rows = [run_scenario(sc).row() for _ in range(3)]
+    assert rows[0] == rows[1] == rows[2]
+
+
+# ---------------------------------------------------------------------------
+# semantics under the DES
+# ---------------------------------------------------------------------------
+
+def test_des_results_and_metrics_match_threaded_semantics():
+    """The DES run produces real results from the real process function,
+    with linked per-hop metrics, exactly like the threaded strategy."""
+    pipe, ex, _, _ = _des_pipeline(n_devices=2, n_messages=16)
+    res = pipe.run(n_messages=16, timeout_s=60.0, scheduler=ex)
+    assert res.n_processed == 16 and res.n_produced == 16
+    assert len(res.results) == 16
+    assert all(r == float(np.sum(np.arange(64.0))) for r in res.results)
+    assert res.metrics.summary()["count"] == 16
+    assert res.per_hop()                      # linked hop decomposition
+
+
+def test_des_consumers_are_event_driven_not_polling():
+    """No idle ticking: the event count stays within a small constant per
+    message (the old harness idle-ticked on a 50 ms cadence; a slow
+    producer would have generated thousands of poll events)."""
+    svc = lambda stage, ctx, data: 5.0 if stage == "produce" else 0.0
+    pipe, ex, _, _ = _des_pipeline(n_devices=1, service_model=svc)
+    res = pipe.run(n_messages=8, timeout_s=600.0, scheduler=ex)
+    assert res.n_processed == 8
+    assert res.wall_s >= 40.0                 # 8 messages × 5 s service
+    # generous bound: spawn/park/wake/service/monitor events, not 50 ms polls
+    assert ex.sched.executed < 400
+
+
+def test_des_honors_wan_visibility_per_message():
+    """Every end-to-end latency includes at least the one-way WAN latency
+    (messages are invisible until their token-bucket ready time)."""
+    pipe, ex, _, _ = _des_pipeline(
+        n_devices=2,
+        wan_shaper=WanShaper(bandwidth_bps=8e6, rtt_s=0.2, sleep=False))
+    res = pipe.run(n_messages=12, timeout_s=60.0, scheduler=ex)
+    lat = res.metrics.latencies("produced", "processed")
+    assert len(lat) == 12
+    assert min(lat) >= 0.1                    # rtt/2 one-way floor
+
+
+def test_des_process_error_retries_and_recovers():
+    boom = {"armed": True}
+
+    def flaky(ctx, data=None):
+        if boom["armed"]:
+            boom["armed"] = False
+            raise RuntimeError("injected")
+        return 0.0
+
+    pipe, ex, _, _ = _des_pipeline(n_devices=2, process=flaky)
+    res = pipe.run(n_messages=20, timeout_s=60.0, scheduler=ex)
+    assert res.n_processed == 20              # nothing lost
+    assert res.metrics.counter("runtime.task_errors") == 1
+    assert res.metrics.counter("runtime.retries") == 1
+
+
+def test_des_silent_node_loss_detected_by_heartbeat_monitor():
+    """A consumer that goes dark (no exception, no group.leave) is detected
+    by the DES heartbeat monitor, rebalanced out, and its partition's
+    messages are redelivered to the relaunched member."""
+    pipe, ex, _, _ = _des_pipeline(
+        n_devices=2, heartbeat_timeout_s=2.0, monitor_interval_s=0.25,
+        crash_plan=(FailureSpec(at_s=0.1, consumer_idx=0,
+                                restart_after_s=None, kind="silent"),),
+        service_model=lambda stage, ctx, data:
+            0.05 if stage == "produce" else 0.0)
+    res = pipe.run(n_messages=20, timeout_s=120.0, scheduler=ex)
+    assert res.n_processed == 20
+    assert res.metrics.events("consumer_lost")
+    assert res.metrics.counter("runtime.retries") >= 1
+    # loss is only detectable after the heartbeat timeout elapses
+    assert res.wall_s > 2.0
+
+
+def test_des_long_wan_wait_is_not_a_heartbeat_loss():
+    """Waiting out a slow WAN is framework-idle, not a hung task: with
+    13 s/message serialization and a 3 s heartbeat timeout, no consumer
+    may be falsely declared lost (regression: the ready_at wait used to
+    bypass the parked-wait bookkeeping the monitor skips)."""
+    pipe, ex, _, _ = _des_pipeline(
+        n_devices=1, heartbeat_timeout_s=3.0, monitor_interval_s=0.25,
+        wan_shaper=WanShaper(bandwidth_bps=1e6, rtt_s=0.15, sleep=False))
+    pipe.replace_function("produce",
+                          lambda ctx: np.zeros(200_000, np.float64))
+    res = pipe.run(n_messages=6, timeout_s=200.0, scheduler=ex)
+    assert res.n_processed == 6
+    assert not res.metrics.events("consumer_lost")
+    assert res.metrics.counter("runtime.task_errors") == 0
+
+
+def test_des_silent_loss_mid_service_releases_dedup_reservation():
+    """A consumer that goes dark *while processing* holds a dedup
+    reservation its generator can never release; the executor must free
+    it so the redelivery is processed, not dropped as a duplicate."""
+    pipe, ex, _, _ = _des_pipeline(
+        n_devices=1, heartbeat_timeout_s=2.0, monitor_interval_s=0.25,
+        crash_plan=(FailureSpec(at_s=0.3, consumer_idx=0,
+                                restart_after_s=None, kind="silent"),),
+        service_model=lambda stage, ctx, data:
+            0.5 if stage == "process_cloud" else 0.01)
+    res = pipe.run(n_messages=10, timeout_s=120.0, scheduler=ex)
+    assert res.n_processed == 10              # nothing lost to the leak
+    assert res.metrics.events("consumer_lost")
+    assert res.wall_s < 60.0                  # no full-timeout stall
+
+
+def test_des_crash_injection_rebalances_and_restarts():
+    pipe, ex, _, _ = _des_pipeline(
+        n_devices=3,
+        crash_plan=(FailureSpec(at_s=0.2, consumer_idx=1,
+                                restart_after_s=0.5),),
+        # slow cloud stage so the run is still in flight at restart time
+        service_model=lambda stage, ctx, data:
+            0.05 if stage == "produce" else 0.3)
+    res = pipe.run(n_messages=30, timeout_s=120.0, scheduler=ex)
+    assert res.n_processed == 30
+    assert res.metrics.events("consumer_crashed")
+    assert res.metrics.events("consumer_restarted")
+
+
+# ---------------------------------------------------------------------------
+# autoscaler in the loop (satellite): lag spike → up → cooldown → down
+# ---------------------------------------------------------------------------
+
+def _autoscale_run():
+    pipe, ex, mgr, clock = _des_pipeline(
+        n_devices=4, cloud_consumers=1,
+        # two-phase load: three devices burst at t=0 (lag spikes → scale
+        # up), the fourth boots late so the pool drains and idles first
+        # (lag → 0 → cooldown → scale down) before the second burst
+        producer_offsets=(0.0, 0.0, 0.0, 25.0),
+        service_model=lambda stage, ctx, data:
+            0.01 if stage == "produce" else 1.0)
+    scaler = AutoScaler(
+        mgr, pipe.pilot_cloud, lag_fn=pipe.current_lag,
+        policy=ScalePolicy(max_workers=4, min_workers=1,
+                           lag_high=6, lag_low=2, cooldown_s=3.0),
+        metrics=pipe.metrics, clock=clock)
+    ex.autoscaler = scaler
+    ex.autoscale_interval_s = 0.5
+    res = pipe.run(n_messages=48, timeout_s=600.0, scheduler=ex)
+    return res, scaler
+
+
+def test_autoscaler_in_the_loop_scales_up_then_down():
+    res, scaler = _autoscale_run()
+    assert res.n_processed == 48
+    ups = [h for h in scaler.history if h["to_workers"] > h["from_workers"]]
+    downs = [h for h in scaler.history
+             if h["to_workers"] < h["from_workers"]]
+    assert ups and downs                      # spike → up, drain → down
+    # cooldown honored: consecutive resizes ≥ cooldown_s apart
+    ts = [h["t"] for h in scaler.history]
+    assert all(b - a >= 3.0 for a, b in zip(ts, ts[1:]))
+    # the pool actually followed the resizes (new members joined the group)
+    assert res.metrics.events("consumer_spawned")
+    assert res.metrics.events("consumer_retired")
+
+
+def test_autoscaler_resize_timestamps_bit_identical_across_runs():
+    histories = [_autoscale_run()[1].history for _ in range(3)]
+    assert histories[0] == histories[1] == histories[2]
+    assert len(histories[0]) >= 2
+
+
+def test_scenario_autoscale_wiring():
+    """Scenario-level autoscale: the policy rides through build_pipeline
+    and the result reports the (deterministic) resize trace."""
+    sc = Scenario(model=AUTOENCODER, placement="cloud", wan_band="100mbit",
+                  n_messages=32, n_consumers=1,
+                  autoscale=ScalePolicy(max_workers=4, min_workers=1,
+                                        lag_high=6, lag_low=2,
+                                        cooldown_s=2.0),
+                  autoscale_interval_s=0.5)
+    a, b = run_scenario(sc), run_scenario(sc)
+    assert a.n_processed == 32
+    assert a.autoscale_events and a.autoscale_events == b.autoscale_events
+    assert a.row() == b.row()
+
+
+def test_build_pipeline_exposes_real_objects():
+    pipe, ex, mgr = build_pipeline(Scenario(model=KMEANS, n_messages=8))
+    assert isinstance(pipe, EdgeToCloudPipeline)
+    res = pipe.run(n_messages=8, timeout_s=3600.0, scheduler=ex)
+    assert res.n_processed == 8

@@ -12,7 +12,7 @@ from repro.core import (Broker, ComputeResource, ConsumerGroup,
                         MetricsRegistry, PilotManager, SimClock, WanShaper,
                         as_clock)
 from repro.core.placement import LinkModel, PlacementEngine
-from repro.sim import EventScheduler
+from repro.sim import PARK, ActorKilled, EventScheduler
 from repro.sim.scenarios import (AUTOENCODER, KMEANS, FailureSpec, Scenario,
                                  format_table, placement_estimates,
                                  run_scenario, sweep)
@@ -122,8 +122,110 @@ def test_scheduler_run_until_bound():
 
 
 # ---------------------------------------------------------------------------
+# actors (cooperative DES processes)
+# ---------------------------------------------------------------------------
+
+def test_actor_sleep_park_resume_and_return():
+    sched = EventScheduler()
+    trace = []
+
+    def body():
+        trace.append(("start", sched.clock.now()))
+        got = yield 1.5                      # sleep 1.5 virtual seconds
+        assert got is None
+        trace.append(("awake", sched.clock.now()))
+        got = yield PARK                     # park until external resume
+        trace.append(("resumed", sched.clock.now(), got))
+        return "done"
+
+    exits = []
+    actor = sched.spawn(body(),
+                        on_exit=lambda a, exc, res: exits.append((exc, res)))
+    sched.run(until=2.0)
+    assert trace == [("start", 0.0), ("awake", 1.5)]
+    assert actor.parked and actor.alive
+    sched.clock.advance(1.0)
+    actor.resume("payload")
+    sched.run()
+    assert trace[-1] == ("resumed", 2.5, "payload")
+    assert exits == [(None, "done")]
+    assert not actor.alive
+
+
+def test_actor_kill_delivers_exception_at_yield_point():
+    sched = EventScheduler()
+    cleaned, exits = [], []
+
+    def body():
+        try:
+            yield PARK
+        except ActorKilled:
+            cleaned.append(True)
+            raise
+
+    actor = sched.spawn(body(),
+                        on_exit=lambda a, exc, res: exits.append(exc))
+    sched.run()
+    actor.kill()
+    sched.run()
+    assert cleaned == [True]
+    assert isinstance(exits[0], ActorKilled)
+
+
+def test_actor_drop_goes_dark_without_on_exit():
+    sched = EventScheduler()
+    exits = []
+
+    def body():
+        yield 10.0
+        exits.append("ran")
+
+    actor = sched.spawn(body(), on_exit=lambda a, e, r: exits.append("exit"))
+    sched.run(until=1.0)
+    actor.drop()
+    sched.run()
+    assert exits == []                       # silent: no steps, no on_exit
+    assert sched.clock.now() < 10.0
+
+
+def test_actor_custom_effect_interpreter():
+    """Non-numeric yields route to the spawner's interpreter (numbers are
+    always sleeps — that's the fixed part of the actor protocol)."""
+    sched = EventScheduler()
+    out = []
+
+    def interpret(actor, eff):
+        actor.resume(eff["x"] * 2, delay=1.0)    # echo doubled, 1 s later
+
+    def body():
+        out.append((yield {"x": 21}))
+        out.append((yield {"x": 5}))
+
+    sched.spawn(body(), interpret=interpret)
+    sched.run()
+    assert out == [42, 10]
+    assert sched.clock.now() == 2.0
+
+
+# ---------------------------------------------------------------------------
 # broker under virtual time
 # ---------------------------------------------------------------------------
+
+def test_topic_append_subscriptions():
+    """Event-driven consumers: subscribers are notified on every produce
+    with the partition and WAN-shaped visibility time."""
+    clock = SimClock()
+    b = Broker(clock=clock)
+    sh = WanShaper(bandwidth_bps=8e6, rtt_s=0.1, sleep=False)
+    t = b.create_topic("t", n_partitions=2, shaper=sh)
+    got = []
+    t.subscribe(lambda p, ready: got.append((p, ready)))
+    t.produce(np.zeros(1000, np.float64), partition=1)
+    assert len(got) == 1
+    assert got[0][0] == 1 and got[0][1] > clock.now()
+    t.unsubscribe(t._subs[0])
+    t.produce(np.zeros(10, np.float64), partition=0)
+    assert len(got) == 1
 
 def test_wan_visibility_honored_under_virtual_clock():
     """With a virtual clock, a message is invisible until its WAN-shaped

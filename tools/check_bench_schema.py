@@ -1,0 +1,81 @@
+#!/usr/bin/env python
+"""Validate a BENCH_*.json file against its committed schema — stdlib only
+(the CI image has no jsonschema package), supporting the subset the
+benchmarks' schemas use: type / required / properties /
+additionalProperties / enum / minimum / exclusiveMinimum / items.
+
+Usage::
+
+    python tools/check_bench_schema.py BENCH_sim.json \\
+        benchmarks/BENCH_sim.schema.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+_TYPES = {"object": dict, "array": list, "string": str,
+          "integer": int, "number": (int, float), "boolean": bool,
+          "null": type(None)}
+
+
+def _check(value, schema, path, errors):
+    t = schema.get("type")
+    if t is not None:
+        py = _TYPES[t]
+        ok = isinstance(value, py)
+        if ok and t in ("integer", "number") and isinstance(value, bool):
+            ok = False
+        if not ok:
+            errors.append(f"{path}: expected {t}, got "
+                          f"{type(value).__name__} ({value!r})")
+            return
+    if "enum" in schema and value not in schema["enum"]:
+        errors.append(f"{path}: {value!r} not in {schema['enum']}")
+    if "minimum" in schema and isinstance(value, (int, float)) \
+            and value < schema["minimum"]:
+        errors.append(f"{path}: {value!r} < minimum {schema['minimum']}")
+    if "exclusiveMinimum" in schema and isinstance(value, (int, float)) \
+            and value <= schema["exclusiveMinimum"]:
+        errors.append(f"{path}: {value!r} <= exclusiveMinimum "
+                      f"{schema['exclusiveMinimum']}")
+    if isinstance(value, dict):
+        props = schema.get("properties", {})
+        for req in schema.get("required", ()):
+            if req not in value:
+                errors.append(f"{path}: missing required key {req!r}")
+        if schema.get("additionalProperties") is False:
+            for k in value:
+                if k not in props:
+                    errors.append(f"{path}: unexpected key {k!r}")
+        for k, sub in props.items():
+            if k in value:
+                _check(value[k], sub, f"{path}.{k}", errors)
+    if isinstance(value, list) and "items" in schema:
+        for i, item in enumerate(value):
+            _check(item, schema["items"], f"{path}[{i}]", errors)
+
+
+def main(argv) -> int:
+    if len(argv) != 3:
+        print(__doc__)
+        return 2
+    with open(argv[1]) as f:
+        data = json.load(f)
+    with open(argv[2]) as f:
+        schema = json.load(f)
+    errors: list = []
+    _check(data, schema, "$", errors)
+    for e in errors[:50]:
+        print(f"schema violation: {e}")
+    if errors:
+        print(f"\nFAIL: {argv[1]} does not match {argv[2]} "
+              f"({len(errors)} violation(s))")
+        return 1
+    n = len(data) if isinstance(data, list) else 1
+    print(f"OK: {argv[1]} matches {argv[2]} ({n} row(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -1,0 +1,58 @@
+#!/usr/bin/env python
+"""Fail CI when tests skip because a dependency is missing.
+
+Reads a ``pytest -rs`` log (file argument or stdin) and scans the short
+test summary's SKIPPED lines. Skips caused by a *missing dependency*
+(``importorskip`` — e.g. hypothesis absent from the image, the failure
+mode ROADMAP flags) fail the job; intentional skips (platform guards,
+explicit markers) pass through.
+
+Usage::
+
+    PYTHONPATH=src python -m pytest -rs -q | tee pytest.log
+    python tools/check_skips.py pytest.log
+"""
+from __future__ import annotations
+
+import re
+import sys
+
+# importorskip / missing-module phrasings across pytest versions
+MISSING_DEP = re.compile(
+    r"could not import|No module named|not installed|"
+    r"unable to import|requires the .* package", re.IGNORECASE)
+
+SKIP_LINE = re.compile(r"^SKIPPED\s*(\[\d+\])?\s*(?P<rest>.*)$")
+
+
+def check(lines) -> int:
+    bad, intentional = [], []
+    for line in lines:
+        m = SKIP_LINE.match(line.strip())
+        if not m:
+            continue
+        rest = m.group("rest")
+        (bad if MISSING_DEP.search(rest) else intentional).append(rest)
+    for s in intentional:
+        print(f"skip (intentional): {s}")
+    for s in bad:
+        print(f"skip (MISSING DEPENDENCY): {s}")
+    if bad:
+        print(f"\nFAIL: {len(bad)} test(s) skipped because a dependency "
+              f"is missing — install it in the CI image "
+              f"(see requirements-test.txt).")
+        return 1
+    print(f"OK: {len(intentional)} intentional skip(s), "
+          f"no missing-dependency skips.")
+    return 0
+
+
+def main(argv) -> int:
+    if len(argv) > 1:
+        with open(argv[1]) as f:
+            return check(f)
+    return check(sys.stdin)
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
