@@ -1,0 +1,93 @@
+"""DES-backed placement-advisor sweep: for each calibrated workload the
+:class:`~repro.cost.advisor.PlacementAdvisor` emulates the *real*
+``EdgeToCloudPipeline`` under ``SimExecutor`` across
+{edge, cloud, hybrid} × {10/50/100 Mbit/s WAN} and ranks the placements by
+predicted throughput — the paper's "evaluate task placement based on
+multiple factors" claim as a reproducible benchmark::
+
+    PYTHONPATH=src python benchmarks/bench_placement.py --check-determinism
+
+``--check-determinism`` runs the whole advisory three times and fails
+(non-zero exit) unless every ranked row is identical. ``--out`` writes the
+rows as JSON; the row shape is pinned by
+``benchmarks/BENCH_placement.schema.json`` (CI validates and uploads the
+file as the ``BENCH_placement`` artifact on every run).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+from repro.cost.advisor import PlacementAdvisor
+from repro.sim.scenarios import MODELS, PLACEMENTS, WAN_BANDS
+
+
+def run_advisories(args):
+    adv = PlacementAdvisor(n_messages=args.messages,
+                           n_devices=args.devices,
+                           n_points=args.points, seed=args.seed,
+                           service_sigma=args.service_sigma)
+    reports = [adv.advise(m, placements=args.placements, bands=args.bands)
+               for m in args.models]
+    rows = [row for rep in reports for row in rep.rows()]
+    return reports, rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--messages", type=int, default=32)
+    ap.add_argument("--devices", type=int, default=4)
+    ap.add_argument("--points", type=int, default=2_500)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--service-sigma", type=float, default=0.0,
+                    help="lognormal service-noise sigma (0 = calibrated "
+                         "deterministic service times)")
+    # nargs='+': an empty list would make --check-determinism pass
+    # vacuously on zero advisory cells
+    ap.add_argument("--models", nargs="+", default=sorted(MODELS),
+                    choices=sorted(MODELS))
+    ap.add_argument("--placements", nargs="+", default=list(PLACEMENTS),
+                    choices=list(PLACEMENTS))
+    ap.add_argument("--bands", nargs="+",
+                    default=sorted(WAN_BANDS,
+                                   key=lambda b: WAN_BANDS[b][0]),
+                    choices=sorted(WAN_BANDS))
+    ap.add_argument("--check-determinism", action="store_true",
+                    help="run the advisory three times; fail unless the "
+                         "ranked rows are identical across all runs")
+    ap.add_argument("--out", default=None, help="write rows as JSON")
+    args = ap.parse_args(argv)
+
+    t0 = time.perf_counter()
+    reports, rows = run_advisories(args)
+    wall = time.perf_counter() - t0
+    for rep in reports:
+        print(rep.table())
+        for band in args.bands:
+            best = rep.best(band)
+            print(f"  -> {rep.model} @ {band}: place on "
+                  f"{best.placement} ({best.throughput_msgs_s:.2f} msg/s, "
+                  f"p95 {best.latency_p95_s:.3f} s)")
+        print()
+    print(f"{len(rows)} advisory cells in {wall*1e3:.0f} ms of wall time")
+
+    rc = 0
+    if args.check_determinism:
+        reruns = [run_advisories(args)[1] for _ in range(2)]
+        if all(rows == other for other in reruns):
+            print("determinism: OK (identical advisories across three "
+                  "runs of the real pipeline under SimExecutor)")
+        else:
+            print("determinism: FAILED — advisories differ across runs")
+            rc = 1
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1, default=float)
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

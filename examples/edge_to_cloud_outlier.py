@@ -1,9 +1,16 @@
 """Full Pilot-Edge scenario: three outlier detectors, model hot-swap,
 autoscaling, and failure recovery — the paper's §II-D dynamism story.
 
-1. stream k-means over the pipeline (low-fidelity model),
+0. ask the DES-backed PlacementAdvisor where this workload should run
+   (``pipeline.run(placement='advise')`` emulates the real pipeline
+   across placements × WAN bands in a few hundred ms),
+1. stream k-means over the pipeline (low-fidelity model) as a *paced*
+   live demo: ``ThreadedExecutor(service_model=...)`` charges every stage
+   its calibrated continuum service time (scaled by ``PACE`` so the demo
+   stays snappy) on real threads,
 2. hot-swap the cloud function to the auto-encoder at runtime —
-   ``replace_function`` re-binds the payload without re-allocating pilots,
+   ``replace_function`` re-binds the payload without re-allocating pilots
+   (the pacing follows: the calibrated AE is ~7,500× costlier per point),
 3. watch the AutoScaler grow the cloud pilot when the heavier model
    falls behind (broker lag),
 4. kill a consumer task mid-stream and observe retry-based recovery.
@@ -15,15 +22,20 @@ import threading
 import numpy as np
 
 from repro.core import (AutoScaler, ComputeResource, EdgeToCloudPipeline,
-                        ParameterService, PilotManager, ScalePolicy)
+                        ParameterService, PilotManager, ScalePolicy,
+                        ThreadedExecutor)
+from repro.cost import default_cost_model
 from repro.ml import AutoEncoder, KMeans, MiniAppGenerator
+
+N_POINTS = 1_000
+PACE = 0.02          # play the paper-testbed timeline 50x faster
 
 manager = PilotManager()
 pilot_edge = manager.submit_pilot(ComputeResource(tier="edge", n_workers=4))
 pilot_cloud = manager.submit_pilot(ComputeResource(tier="cloud",
                                                    n_workers=2))
 
-generator = MiniAppGenerator(n_points=1_000, n_clusters=25, seed=3)
+generator = MiniAppGenerator(n_points=N_POINTS, n_clusters=25, seed=3)
 params_service = ParameterService()
 
 kmeans = KMeans(n_clusters=25)
@@ -50,8 +62,33 @@ pipeline = EdgeToCloudPipeline(
     produce_function_handler=generator.make_producer(),
     process_cloud_function_handler=flaky_process,
     parameter_service=params_service,
+    function_context={"model": "kmeans", "n_points": N_POINTS},
     max_retries=2,
 )
+
+# --- step 0: placement advisory (DES on the real pipeline, virtual time) --
+report = pipeline.run(placement="advise")
+print(report.table())
+best = report.best("10mbit")
+print(f">> advisor: run {report.model} on the *{best.placement}* tier at "
+      f"10 Mbit/s ({best.throughput_msgs_s:.1f} msg/s predicted)\n")
+
+# --- paced live run: calibrated service times on real threads -------------
+cost = default_cost_model()
+current = {"model": "kmeans"}
+
+
+def paced_service(stage, ctx, payload):
+    """Charge each stage its calibrated continuum cost × PACE (the same
+    per-point generation cost the advisor's prediction is priced with)."""
+    from repro.cost.calibrate import DEFAULT_GEN_S_PER_POINT
+    if stage == "produce":
+        return PACE * DEFAULT_GEN_S_PER_POINT * N_POINTS
+    if stage == "process_cloud":
+        return PACE * cost.model_compute_s(current["model"], N_POINTS,
+                                           "cloud")
+    return 0.0
+
 
 # autoscaler: watch broker lag on the pipeline's topic
 scaler = AutoScaler(
@@ -66,6 +103,7 @@ scaler = AutoScaler(
 def swap_later():
     import time
     time.sleep(0.5)
+    current["model"] = "autoencoder"     # re-pace *before* the swap lands
     pipeline.replace_function("process_cloud", ae_processor)
     print(">> hot-swapped process_cloud: kmeans -> autoencoder "
           "(no pilot re-allocation)")
@@ -73,7 +111,9 @@ def swap_later():
 
 threading.Thread(target=swap_later, daemon=True).start()
 scaler.start()
-result = pipeline.run(n_messages=96, timeout_s=120)
+result = pipeline.run(n_messages=96, timeout_s=120,
+                      scheduler=ThreadedExecutor(
+                          service_model=paced_service))
 scaler.stop()
 
 print(f"\nprocessed {result.n_processed} messages in {result.wall_s:.2f}s "

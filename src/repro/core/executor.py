@@ -9,6 +9,12 @@ once, as *cooperative generator bodies* (``faas._producer_body`` /
   strategy's ``service_model``; zero by default),
 * :class:`Poll`    — fetch the next message from a consumer group.
 
+Both strategies accept any ``service_model(stage, ctx, payload) -> s``
+callable; :meth:`repro.cost.model.CostModel.service_model` builds the
+*calibrated* one — per-stage times derived from the measured ``repro.ml``
+kernel costs, optionally with the calibrated lognormal service-time noise
+(seeded, so DES runs stay bit-reproducible).
+
 Two strategies interpret those effects:
 
 * :class:`ThreadedExecutor` — real threads on :class:`TaskRuntime`
@@ -83,8 +89,11 @@ class ThreadedExecutor:
     """Run the pipeline bodies on real threads via :class:`TaskRuntime`.
 
     ``service_model`` is optional wall-pacing (used by live demos to make
-    stage costs real); by default effects cost nothing and behaviour is
-    identical to the historical thread-scheduled pipeline.
+    stage costs real — ``examples/edge_to_cloud_outlier.py`` paces with
+    the calibrated continuum costs, and a slow-marked test pins its
+    throughput against the SimExecutor prediction); by default effects
+    cost nothing and behaviour is identical to the historical
+    thread-scheduled pipeline.
     """
 
     def __init__(self, *, service_model: Optional[ServiceModel] = None):

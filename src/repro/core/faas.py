@@ -303,17 +303,52 @@ class EdgeToCloudPipeline:
                               n_produced=n_prod,
                               n_processed=state.n_processed, wall_s=wall_s)
 
-    def run(self, n_messages: int = 512,
+    def run(self, n_messages: Optional[int] = None,
             timeout_s: float = 600.0,
             collect_results: bool = True,
-            scheduler=None) -> PipelineResult:
-        """Drive ``n_messages`` end-to-end (the paper sends 512 per run).
+            scheduler=None, placement: Optional[str] = None):
+        """Drive ``n_messages`` end-to-end (default 512 — what the paper
+        sends per run).
 
         ``scheduler`` selects the execution strategy:
         :class:`~repro.core.executor.ThreadedExecutor` (default — real
         threads) or :class:`~repro.core.executor.SimExecutor`
         (single-threaded virtual time, bit-reproducible metrics).
+
+        ``placement='advise'`` does not execute this pipeline at all:
+        instead the :class:`~repro.cost.advisor.PlacementAdvisor` emulates
+        a pipeline of this shape (devices/consumers; workload from
+        ``function_context['model']`` / ``['n_points']``) under its own
+        ``SimExecutor`` across placements × WAN bands and returns the
+        ranked :class:`~repro.cost.advisor.AdvisorReport` — the paper's
+        "evaluate task placement based on multiple factors" knob.  An
+        explicit ``n_messages`` sets the per-cell advisory fidelity
+        (default 32 — the whole grid in a few hundred ms); ``timeout_s``/
+        ``collect_results`` do not apply and ``scheduler`` is rejected.
         """
+        if placement == "advise":
+            if scheduler is not None:
+                raise ValueError(
+                    "placement='advise' runs its own SimExecutor grid; "
+                    "scheduler= does not apply")
+            model = self.context.get("model")
+            if model is None:
+                raise ValueError(
+                    "placement='advise' needs function_context['model'] "
+                    "to name a calibrated workload (e.g. 'kmeans') — "
+                    "advising for a guessed model would silently rank "
+                    "the wrong trade-off")
+            # imported lazily: the advisor rides the sim/scenarios stack,
+            # which imports this module
+            from repro.cost.advisor import PlacementAdvisor
+            kw = {} if n_messages is None else {"n_messages": n_messages}
+            return PlacementAdvisor.from_pipeline(self, **kw).advise(model)
+        if placement is not None and placement != self.placement:
+            raise ValueError(
+                f"unsupported run-time placement {placement!r} "
+                f"(constructor placement is {self.placement!r}; "
+                f"run-time only supports 'advise')")
+        n_messages = 512 if n_messages is None else n_messages
         strategy = scheduler if scheduler is not None else ThreadedExecutor()
         return strategy.run(self, n_messages=n_messages,
                             timeout_s=timeout_s,

@@ -20,48 +20,46 @@ experiment-driven trade-off (Fig 3: k-means is transfer-bound so geo
 placement halves throughput; autoencoders are compute-bound so the network
 "is not the bottleneck") turned into a cost model, and it is what the
 EdgeToCloudPipeline uses when the application passes ``placement='auto'``.
+
+Every number the engine prices with flows from the unified cost subsystem
+(:mod:`repro.cost`): link bandwidths/latencies come from the shared
+:data:`~repro.cost.profiles.WAN_BANDS` table (``DEFAULT_LINKS`` below is an
+import-time snapshot of it, pinned equal by a regression test) and tier
+FLOP rates come from the continuum profile's device
+specs — there are no module-level cost constants here any more.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 from repro.core.pilot import Pilot
+from repro.cost.model import CostModel, default_cost_model
+from repro.cost.profiles import DEFAULT_PROFILE, LinkModel  # noqa: F401
 
-
-@dataclass(frozen=True)
-class LinkModel:
-    """Bandwidth (bytes/s) + latency between tiers."""
-    bandwidth: float
-    latency_s: float = 0.0
-
-
-# defaults: WAN for edge<->cloud (paper's iPerf band), fast links intra-tier
-DEFAULT_LINKS: Dict[Tuple[str, str], LinkModel] = {
-    ("edge", "cloud"): LinkModel(bandwidth=10e6, latency_s=0.150),
-    ("edge", "hpc"): LinkModel(bandwidth=10e6, latency_s=0.150),
-    ("cloud", "hpc"): LinkModel(bandwidth=1e9, latency_s=0.020),
-}
+# the shared link table (edge↔cloud/hpc ride the paper's 10 Mbit/s iPerf
+# WAN band, cloud↔hpc a fat datacenter link) — an import-time snapshot of
+# the continuum profile, pinned equal to sim.scenarios' WAN table by a
+# regression test
+DEFAULT_LINKS: Dict[Tuple[str, str], LinkModel] = dict(
+    DEFAULT_PROFILE.links)
 
 
 def link_between(a: str, b: str,
-                 links: Dict[Tuple[str, str], LinkModel]) -> LinkModel:
+                 links: Dict[Tuple[str, str], LinkModel],
+                 profile=DEFAULT_PROFILE) -> LinkModel:
+    """Resolve the link between two tiers: the explicit table first, then
+    the profile's intra-tier / fallback links."""
     if a == b:
-        return LinkModel(bandwidth=10e9, latency_s=0.0)
-    return links.get((a, b)) or links.get((b, a)) or \
-        LinkModel(bandwidth=10e6, latency_s=0.2)
-
-
-# effective per-pilot compute (FLOP/s). Edge = RasPi-class (paper: 1 core /
-# 4 GB Dask task). Cloud devices get a per-device rate.
-EDGE_FLOPS = 5e9
-DEVICE_FLOPS = 50e9           # host CPU device (the container's reality)
+        return profile.link(a, a)
+    return links.get((a, b)) or links.get((b, a)) or profile.link(a, b)
 
 
 @dataclass(frozen=True)
 class TaskProfile:
-    """What the placement engine knows about a task."""
+    """What the placement engine knows about a task. ``flops`` is
+    peak-rate-equivalent work (a calibrated ``ModelCost`` folds kernel
+    efficiency into its ``effective_flops_per_point``)."""
     flops: float = 0.0                 # estimated compute
     input_bytes: float = 0.0           # bytes it must pull
     input_tier: str = "edge"           # where the input currently lives
@@ -79,12 +77,23 @@ class PlacementDecision:
 
 
 class PlacementEngine:
+    """Scores pilots through a :class:`~repro.cost.model.CostModel`.
+
+    ``links`` overrides the link table (e.g. one WAN band of the Fig-3
+    sweep); ``edge_flops``/``device_flops`` override the profile's tier
+    rates (back-compat knobs — prefer passing a ``cost_model`` built on a
+    custom :class:`~repro.cost.profiles.ContinuumProfile`)."""
+
     def __init__(self, links: Optional[Dict] = None,
-                 edge_flops: float = EDGE_FLOPS,
-                 device_flops: float = DEVICE_FLOPS):
-        self.links = dict(DEFAULT_LINKS if links is None else links)
-        self.edge_flops = edge_flops
-        self.device_flops = device_flops
+                 edge_flops: Optional[float] = None,
+                 device_flops: Optional[float] = None,
+                 cost_model: Optional[CostModel] = None):
+        self.cost = cost_model or default_cost_model()
+        self.links = dict(self.cost.links if links is None else links)
+        self.edge_flops = (edge_flops if edge_flops is not None
+                           else self.cost.tier_flops("edge"))
+        self.device_flops = (device_flops if device_flops is not None
+                             else self.cost.tier_flops("cloud"))
 
     def pilot_flops(self, pilot: Pilot) -> float:
         if pilot.mesh is not None:
@@ -95,12 +104,15 @@ class PlacementEngine:
 
     def estimate(self, task: TaskProfile, pilot: Pilot,
                  queue_depth: int = 0) -> PlacementDecision:
-        move_in = link_between(task.input_tier, pilot.tier, self.links)
+        profile = self.cost.profile
+        move_in = link_between(task.input_tier, pilot.tier, self.links,
+                               profile)
         t_in = (task.input_bytes / move_in.bandwidth + move_in.latency_s
                 if task.input_bytes else 0.0)
         t_out = 0.0
         if task.output_bytes and task.output_tier:
-            move_out = link_between(pilot.tier, task.output_tier, self.links)
+            move_out = link_between(pilot.tier, task.output_tier,
+                                    self.links, profile)
             t_out = (task.output_bytes / move_out.bandwidth
                      + move_out.latency_s)
         t_compute = task.flops / max(self.pilot_flops(pilot), 1.0)

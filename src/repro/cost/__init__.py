@@ -1,0 +1,39 @@
+"""Unified continuum cost subsystem.
+
+* :mod:`repro.cost.profiles`  — devices / tiers / links (the one shared
+  link table: ``WAN_BANDS``, ``DEFAULT_PROFILE``),
+* :mod:`repro.cost.calibrate` — per-model costs measured from the compiled
+  ``repro.ml`` kernels (roofline HLO flops) and/or wall-time samples
+  (efficiency + lognormal service noise); the committed
+  ``calibration.json`` is the deterministic default,
+* :mod:`repro.cost.model`     — :class:`CostModel`, the single
+  compute/transfer/service-time oracle the placement engine, the DES
+  scenarios and the advisor all consume,
+* :mod:`repro.cost.advisor`   — :class:`PlacementAdvisor`, a DES-backed
+  ranked placement recommendation on the genuine pipeline (re-exported
+  lazily: it imports the sim/core stack, which imports this package).
+"""
+from repro.cost.calibrate import (CALIBRATION_PATH, Calibrator, ModelCost,
+                                  load_calibration, save_calibration)
+from repro.cost.model import CostModel, default_cost_model
+from repro.cost.profiles import (DEFAULT_PROFILE, DEFAULT_WAN_BAND,
+                                 WAN_BANDS, ContinuumProfile, DeviceProfile,
+                                 LinkModel, TierProfile)
+
+_LAZY = ("PlacementAdvisor", "AdvisorReport", "Advice")
+
+__all__ = [
+    "LinkModel", "DeviceProfile", "TierProfile", "ContinuumProfile",
+    "WAN_BANDS", "DEFAULT_WAN_BAND", "DEFAULT_PROFILE",
+    "ModelCost", "Calibrator", "load_calibration", "save_calibration",
+    "CALIBRATION_PATH",
+    "CostModel", "default_cost_model",
+    *_LAZY,
+]
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        from repro.cost import advisor
+        return getattr(advisor, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

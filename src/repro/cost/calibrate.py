@@ -1,0 +1,345 @@
+"""Calibrate per-model compute costs from the *measured* ``repro.ml``
+kernels instead of hand-tuned analytic constants.
+
+Two calibration sources, composable:
+
+1. **Roofline (HLO) flops** — deterministic: each workload's real JAX
+   kernels (k-means assign+update, the autoencoder train step, isolation
+   forest fit+score) are compiled and costed with the trip-count-aware
+   :class:`~repro.roofline.hlo_cost.HloCostModel`.  This yields
+   ``kernel_flops_per_point`` — what one kernel invocation actually
+   executes, per data point.
+2. **Measured wall-time samples** — optional: real per-message service
+   times on a given tier.  :meth:`Calibrator.fit_service` fits the
+   *efficiency* (achieved fraction of the tier device's peak — small-batch
+   dense kernels land far below peak) and a **lognormal service-time noise
+   model** (``sigma`` = std of log service time), which is what the DES
+   straggler machinery needs to make speculation meaningful.
+
+The committed ``calibration.json`` next to this module is the default
+calibration everything loads: HLO flops measured in this container
+(regenerate with ``python -m repro.cost.calibrate --out ...``) plus
+efficiencies/noise fitted to the paper's testbed wall times (PyOD's
+Keras autoencoder trains its default 100 epochs per batch; RasPi/EC2
+achieve a small fraction of peak on these small dense kernels).  The
+defaults keep every consumer deterministic — live recalibration is a tool
+invocation, never an import-time side effect.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import os
+from dataclasses import dataclass
+from typing import Dict, Mapping, Optional, Sequence
+
+from repro.cost.profiles import DEFAULT_PROFILE, ContinuumProfile
+
+CALIBRATION_PATH = os.path.join(os.path.dirname(__file__),
+                                "calibration.json")
+
+# calibration reference shape: the paper's default message
+CAL_N_POINTS = 2_500
+CAL_N_FEATURES = 32
+
+# analytic workload defaults shared with sim.scenarios (defined once,
+# here in the cost subsystem): the hybrid edge pre-aggregation shrink
+# factor, its per-point cost, and the Mini-App generation cost per point
+DEFAULT_HYBRID_REDUCE = 10
+DEFAULT_PREPROCESS_FLOPS_PER_POINT = 200.0
+DEFAULT_GEN_S_PER_POINT = 2e-6
+
+
+@dataclass(frozen=True)
+class ModelCost:
+    """Calibrated cost of one processing model.
+
+    ``kernel_flops_per_point`` × ``invocations_per_message`` is the real
+    work one message triggers; dividing by ``efficiency`` expresses it as
+    peak-rate-equivalent flops so every consumer can price service time as
+    ``effective_flops / (device.peak_flops × workers)``.
+    """
+    name: str
+    kernel_flops_per_point: float      # HLO-measured, one invocation
+    kernel_bytes_per_point: float      # HLO bytes (roofline memory term)
+    invocations_per_message: float     # workload heaviness (e.g. AE epochs)
+    efficiency: float                  # achieved fraction of device peak
+    sigma: float                       # lognormal service-noise (log-space)
+    output_bytes: int                  # serialized model output / message
+    hybrid_reduce: int = DEFAULT_HYBRID_REDUCE
+    preprocess_flops_per_point: float = DEFAULT_PREPROCESS_FLOPS_PER_POINT
+    source: str = "roofline"           # roofline | measured | analytic
+
+    @property
+    def flops_per_point(self) -> float:
+        """Real flops one message executes, per point."""
+        return self.kernel_flops_per_point * self.invocations_per_message
+
+    @property
+    def effective_flops_per_point(self) -> float:
+        """Peak-rate-equivalent flops per point (folds in efficiency)."""
+        return self.flops_per_point / max(self.efficiency, 1e-9)
+
+
+def load_calibration(path: Optional[str] = None) -> Dict[str, ModelCost]:
+    """Load a calibration file (the committed one by default)."""
+    with open(path or CALIBRATION_PATH) as f:
+        doc = json.load(f)
+    fields = {f.name for f in dataclasses.fields(ModelCost)}
+    return {name: ModelCost(**{k: v for k, v in entry.items()
+                               if k in fields})
+            for name, entry in doc["models"].items()}
+
+
+def save_calibration(costs: Mapping[str, ModelCost], path: str,
+                     meta: Optional[dict] = None) -> None:
+    doc = {"meta": dict(meta or {}),
+           "models": {name: dataclasses.asdict(mc)
+                      for name, mc in sorted(costs.items())}}
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=False)
+        f.write("\n")
+
+
+# ---------------------------------------------------------------------------
+# roofline measurement of the real repro.ml kernels
+# ---------------------------------------------------------------------------
+
+
+def _hlo_cost(fn, *args):
+    """(flops, bytes) of a jitted callable via the trip-count-aware HLO
+    parser (jax imported lazily: calibration is a tool, not an import-time
+    dependency)."""
+    import jax
+
+    from repro.roofline.hlo_cost import HloCostModel
+    m = HloCostModel(jax.jit(fn).lower(*args).compile().as_text())
+    return m.flops(), m.bytes_accessed()
+
+
+def _measure_kmeans(n_points: int, n_features: int, n_clusters: int = 25):
+    """Per-message work: one assignment (outlier scoring) + one mini-batch
+    update — exactly what ``KMeans.make_processor`` runs per message."""
+    import jax.numpy as jnp
+    from jax import ShapeDtypeStruct as S
+
+    from repro.ml.kmeans import _assign, _update
+    cent = S((n_clusters, n_features), jnp.float32)
+    cnts = S((n_clusters,), jnp.float32)
+    pts = S((n_points, n_features), jnp.float32)
+    fa, ba = _hlo_cost(lambda c, p: _assign(c, p), cent, pts)
+    fu, bu = _hlo_cost(lambda c, n, p: _update(c, n, p), cent, cnts, pts)
+    return (fa + fu) / n_points, (ba + bu) / n_points
+
+
+def _measure_autoencoder(n_points: int, n_features: int):
+    """Per-invocation work: one Adam train step over the PyOD topology
+    (the workload's ``invocations_per_message`` counts the epochs)."""
+    import jax.numpy as jnp
+    from jax import ShapeDtypeStruct as S
+
+    from repro.ml.autoencoder import AutoEncoder
+    ae = AutoEncoder(n_features=n_features)
+    st = ae.init()
+    x = S((n_points, n_features), jnp.float32)
+    step = jnp.zeros((), jnp.int32)
+    fs, bs = _hlo_cost(lambda p, o, s, xx: ae._step(p, o, s, xx),
+                       st["params"], st["opt"], step, x)
+    return fs / n_points, bs / n_points
+
+
+def _measure_isoforest(n_points: int, n_features: int):
+    """Per-message work: refit the 100-tree forest + score the message
+    (``IsolationForest.make_processor`` refits on every message)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax import ShapeDtypeStruct as S
+
+    from repro.ml.isoforest import IsolationForest, _fit, _score
+    isf = IsolationForest()
+    pts = S((n_points, n_features), jnp.float32)
+    ff, bf = _hlo_cost(
+        lambda p: _fit(jax.random.key(0), p, isf.n_trees, isf.psi,
+                       isf.max_depth), pts)
+    forest = isf.fit(np.zeros((max(isf.psi, 2), n_features),
+                              np.float32))["forest"]
+    fs, bs = _hlo_cost(
+        lambda fo, p: _score(fo, p, jnp.float32(isf.psi), isf.max_depth),
+        forest, pts)
+    return (ff + fs) / n_points, (bf + bs) / n_points
+
+
+_MEASURERS = {
+    "kmeans": _measure_kmeans,
+    "autoencoder": _measure_autoencoder,
+    "isoforest": _measure_isoforest,
+}
+
+# Paper-testbed service fit (used when no wall-time samples are supplied):
+# invocations (PyOD's Keras AE trains its default 100 epochs per batch;
+# k-means/iforest run once per message), efficiency (fitted from the
+# paper's Fig-2/3 wall times — small dense kernels achieve a small
+# fraction of peak), and lognormal service noise fitted from measured
+# per-message samples (lighter kernels jitter relatively more).
+_PAPER_SERVICE_FIT = {
+    "kmeans": dict(invocations_per_message=1.0, efficiency=0.65,
+                   sigma=0.25, output_bytes=25 * CAL_N_FEATURES * 8),
+    "autoencoder": dict(invocations_per_message=100.0, efficiency=0.15,
+                        sigma=0.10, output_bytes=2_048),
+    "isoforest": dict(invocations_per_message=1.0, efficiency=0.45,
+                      sigma=0.20, output_bytes=2_048),
+}
+
+
+class Calibrator:
+    """Fits :class:`ModelCost` entries from the two calibration sources."""
+
+    def __init__(self, profile: Optional[ContinuumProfile] = None,
+                 n_points: int = CAL_N_POINTS,
+                 n_features: int = CAL_N_FEATURES):
+        self.profile = profile or DEFAULT_PROFILE
+        self.n_points = n_points
+        self.n_features = n_features
+
+    # -- source 1: roofline flops of the compiled kernels ------------------
+
+    def measure_kernel(self, model: str):
+        """(flops_per_point, bytes_per_point) of one kernel invocation of
+        ``model``, from trip-count-aware HLO cost analysis."""
+        try:
+            measure = _MEASURERS[model]
+        except KeyError:
+            raise KeyError(f"no kernel measurer for {model!r}; "
+                           f"known: {sorted(_MEASURERS)}") from None
+        return measure(self.n_points, self.n_features)
+
+    # -- source 2: measured wall-time samples ------------------------------
+
+    def fit_service(self, samples_s: Sequence[float], *,
+                    flops_per_message: float, tier: str = "cloud",
+                    n_workers: int = 1):
+        """Fit (efficiency, sigma) from measured per-message service times.
+
+        efficiency = flops / (peak × arithmetic-mean(t)), with the mean
+        taken as the lognormal ``exp(μ + σ²/2)``; sigma is the std of log
+        service time.  Together they define the *mean-one* lognormal
+        service-time model ``t ~ eff_service × LogNormal(-σ²/2, σ)`` that
+        :meth:`repro.cost.model.CostModel.service_model` applies — fitting
+        against the arithmetic mean makes the round trip exact (samples
+        generated by ``service_model`` refit to the same parameters).
+        """
+        ts = [float(t) for t in samples_s if t > 0]
+        if not ts:
+            raise ValueError("need at least one positive sample")
+        logs = [math.log(t) for t in ts]
+        mu = sum(logs) / len(logs)
+        var = (sum((x - mu) ** 2 for x in logs) / (len(logs) - 1)
+               if len(logs) > 1 else 0.0)
+        peak = self.profile.tier(tier).device.peak_flops * n_workers
+        efficiency = flops_per_message / (peak * math.exp(mu + var / 2.0))
+        return min(efficiency, 1.0), math.sqrt(var)
+
+    def sample_service(self, model: str, n_messages: int = 5):
+        """Wall-time per-message samples of the real processor on this
+        host (jit warmed first) — input for :meth:`fit_service`."""
+        import time
+
+        from repro import ml
+        maker = {"kmeans": ml.KMeans, "autoencoder": ml.AutoEncoder,
+                 "isoforest": ml.IsolationForest}[model]()
+        process = maker.make_processor()
+        gen = ml.MiniAppGenerator(n_points=self.n_points,
+                                  n_features=self.n_features)
+        ctx = type("Ctx", (), {"attempt": 0})()
+        process(ctx, data=gen.sample())          # warm the jit caches
+        samples = []
+        for _ in range(n_messages):
+            data = gen.sample()
+            t0 = time.perf_counter()
+            process(ctx, data=data)
+            samples.append(time.perf_counter() - t0)
+        return samples
+
+    def measure_service(self, model: str, *, n_messages: int = 5,
+                        tier: str = "cloud",
+                        kernel_flops_per_point: Optional[float] = None):
+        """Run the real processor ``n_messages`` times and fit
+        (efficiency, sigma) on this host — a *container* calibration, not
+        the committed paper-testbed one.  Pass ``kernel_flops_per_point``
+        to skip the kernel recompile when it was already measured."""
+        if kernel_flops_per_point is None:
+            kernel_flops_per_point, _ = self.measure_kernel(model)
+        fit = _PAPER_SERVICE_FIT[model]
+        flops = (kernel_flops_per_point * fit["invocations_per_message"]
+                 * self.n_points)
+        return self.fit_service(self.sample_service(model, n_messages),
+                                flops_per_message=flops, tier=tier)
+
+    # -- assembly ----------------------------------------------------------
+
+    def calibrate(self, *, measure_service: bool = False,
+                  models: Optional[Sequence[str]] = None
+                  ) -> Dict[str, ModelCost]:
+        """Full calibration: roofline flops always; efficiency/sigma from
+        live wall-time samples when ``measure_service`` (container fit),
+        otherwise the committed paper-testbed service fit."""
+        out: Dict[str, ModelCost] = {}
+        for name in models or sorted(_MEASURERS):
+            kf, kb = self.measure_kernel(name)
+            fit = dict(_PAPER_SERVICE_FIT[name])
+            if name == "kmeans":
+                # the published output is the k x d centroid table — it
+                # scales with the calibration's feature count
+                fit["output_bytes"] = 25 * self.n_features * 8
+            source = "roofline"
+            if measure_service:
+                eff, sigma = self.measure_service(
+                    name, kernel_flops_per_point=kf)
+                fit.update(efficiency=eff, sigma=sigma)
+                source = "measured"
+            out[name] = ModelCost(
+                name=name, kernel_flops_per_point=round(kf, 3),
+                kernel_bytes_per_point=round(kb, 3),
+                invocations_per_message=fit["invocations_per_message"],
+                efficiency=fit["efficiency"], sigma=fit["sigma"],
+                output_bytes=fit["output_bytes"], source=source)
+        return out
+
+
+def main(argv=None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=CALIBRATION_PATH,
+                    help="where to write the calibration JSON")
+    ap.add_argument("--points", type=int, default=CAL_N_POINTS)
+    ap.add_argument("--features", type=int, default=CAL_N_FEATURES)
+    ap.add_argument("--measure-service", action="store_true",
+                    help="fit efficiency/noise from live wall-time samples "
+                         "on this host (default: keep the committed "
+                         "paper-testbed service fit)")
+    args = ap.parse_args(argv)
+    cal = Calibrator(n_points=args.points, n_features=args.features)
+    costs = cal.calibrate(measure_service=args.measure_service)
+    import jax
+    save_calibration(costs, args.out, meta={
+        "n_points": args.points, "n_features": args.features,
+        "jax_version": jax.__version__,
+        "generated_by": "python -m repro.cost.calibrate",
+        "service_fit": ("measured on this host"
+                        if args.measure_service else "paper testbed"),
+    })
+    for name, mc in sorted(costs.items()):
+        print(f"{name:>12}: {mc.kernel_flops_per_point:>12.1f} flops/pt "
+              f"x {mc.invocations_per_message:g} inv "
+              f"/ eff {mc.efficiency:g} "
+              f"= {mc.effective_flops_per_point:.3e} effective flops/pt "
+              f"(sigma={mc.sigma:g})")
+    print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

@@ -1,0 +1,146 @@
+"""Continuum hardware profiles — the single source of truth for every
+device / tier / link parameter in the repo.
+
+Before this subsystem existed the cost knowledge was triplicated:
+``core/placement.py`` hardcoded ``EDGE_FLOPS``/``DEVICE_FLOPS``/
+``DEFAULT_LINKS``, ``sim/scenarios.py`` hardcoded its own ``WAN_BANDS``
+(with drifted latencies), and ``roofline/`` measured real HLO costs that
+nothing consumed.  Now:
+
+* :class:`DeviceProfile` — one device's sustained peak rates (the paper's
+  testbed: RasPi-4-class edge nodes, EC2-class cloud workers),
+* :class:`TierProfile` — a continuum tier (edge / cloud / hpc) backed by a
+  device profile plus its intra-tier link,
+* :class:`LinkModel`  — bandwidth (bytes/s) + latency between tiers,
+* :data:`WAN_BANDS`   — the paper's iPerf bands as the one shared link
+  table (``sim.scenarios.WAN_BANDS`` and ``core.placement.DEFAULT_LINKS``
+  are both import-time snapshots of this dict — pinned equal by a
+  regression test),
+* :class:`ContinuumProfile` — the assembled continuum the
+  :class:`~repro.cost.model.CostModel` prices against.
+
+Per-model compute costs (FLOPs/point, efficiencies, service-time noise)
+live next door in :mod:`repro.cost.calibrate` — measured from the compiled
+``repro.ml`` kernels, not asserted.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Dict, Mapping, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class LinkModel:
+    """Bandwidth (bytes/s) + latency between tiers."""
+    bandwidth: float
+    latency_s: float = 0.0
+
+    @property
+    def bandwidth_bps(self) -> float:
+        """Bandwidth in bits/s (the WanShaper's unit)."""
+        return self.bandwidth * 8.0
+
+
+# The paper's iPerf WAN bands (§III, Fig 2/3): bandwidth is stored in
+# bytes/s (LinkModel's unit); ``.bandwidth_bps`` recovers the bits/s the
+# WanShaper wants. The constrained 10 Mbit/s point is the band the
+# placement-sensitivity experiments run at.
+WAN_BANDS: Dict[str, LinkModel] = {
+    "10mbit": LinkModel(bandwidth=10e6 / 8.0, latency_s=0.150),
+    "50mbit": LinkModel(bandwidth=50e6 / 8.0, latency_s=0.150),
+    "100mbit": LinkModel(bandwidth=100e6 / 8.0, latency_s=0.140),
+}
+DEFAULT_WAN_BAND = "10mbit"
+
+
+@dataclass(frozen=True)
+class DeviceProfile:
+    """Sustained peak rates of one device class."""
+    name: str
+    peak_flops: float              # FLOP/s at full efficiency
+    mem_bw: float = 0.0            # bytes/s (roofline memory term)
+    memory_gb: float = 4.0
+
+
+# The paper's testbed devices. Edge = RasPi-class (1 core / 4 GB Dask
+# task); cloud/hpc = one EC2-class worker core-set per Dask worker.
+RASPI_4B = DeviceProfile("raspi-4b", peak_flops=5e9, mem_bw=4e9,
+                         memory_gb=4.0)
+CLOUD_CPU = DeviceProfile("cloud-cpu", peak_flops=50e9, mem_bw=20e9,
+                          memory_gb=16.0)
+
+
+@dataclass(frozen=True)
+class TierProfile:
+    """One continuum tier: which device backs it + its intra-tier link."""
+    tier: str
+    device: DeviceProfile
+    # within a tier messages ride local links (LAN / host loopback)
+    intra_link: LinkModel = LinkModel(bandwidth=10e9, latency_s=0.0)
+
+
+@dataclass(frozen=True)
+class ContinuumProfile:
+    """The assembled continuum: tiers + inter-tier links + WAN bands."""
+    name: str
+    tiers: Mapping[str, TierProfile]
+    links: Mapping[Tuple[str, str], LinkModel]
+    wan_bands: Mapping[str, LinkModel] = field(
+        default_factory=lambda: dict(WAN_BANDS))
+    default_wan: str = DEFAULT_WAN_BAND
+
+    def tier(self, name: str) -> TierProfile:
+        try:
+            return self.tiers[name]
+        except KeyError:
+            raise KeyError(f"unknown tier {name!r}; "
+                           f"known: {sorted(self.tiers)}") from None
+
+    def wan(self, band: Optional[str] = None) -> LinkModel:
+        return self.wan_bands[band or self.default_wan]
+
+    def link(self, a: str, b: str) -> LinkModel:
+        """Link between two tiers; same-tier rides the intra-tier link,
+        unknown cross-tier pairs fall back to the default WAN band with a
+        conservative doubled latency."""
+        if a == b:
+            tp = self.tiers.get(a)
+            return tp.intra_link if tp else LinkModel(10e9, 0.0)
+        link = self.links.get((a, b)) or self.links.get((b, a))
+        if link is not None:
+            return link
+        wan = self.wan()
+        return LinkModel(bandwidth=wan.bandwidth,
+                         latency_s=2.0 * max(wan.latency_s, 0.1))
+
+    def with_wan(self, band: str) -> "ContinuumProfile":
+        """The same continuum with every WAN link re-priced at a named
+        band (the Fig-3 sweep's knob).  A link counts as WAN when it
+        currently carries one of this profile's band prices — tier names
+        don't matter, so custom continuums re-price correctly too."""
+        wan = self.wan(band)
+        band_links = set(self.wan_bands.values())
+        links = {pair: (wan if link in band_links else link)
+                 for pair, link in self.links.items()}
+        return replace(self, links=links, default_wan=band)
+
+
+def _default_profile() -> ContinuumProfile:
+    wan = WAN_BANDS[DEFAULT_WAN_BAND]
+    return ContinuumProfile(
+        name="paper-testbed",
+        tiers={
+            "edge": TierProfile("edge", RASPI_4B),
+            "cloud": TierProfile("cloud", CLOUD_CPU),
+            "hpc": TierProfile("hpc", CLOUD_CPU),
+        },
+        links={
+            ("edge", "cloud"): wan,
+            ("edge", "hpc"): wan,
+            ("cloud", "hpc"): LinkModel(bandwidth=1e9, latency_s=0.020),
+        })
+
+
+# the profile everything defaults to: the paper's RasPi + EC2 testbed with
+# the constrained 10 Mbit/s WAN between edge and cloud/hpc
+DEFAULT_PROFILE = _default_profile()

@@ -20,11 +20,20 @@ Placement modalities (the paper's deployment modalities, §II-C):
 * ``hybrid`` — an edge pre-aggregation stage shrinks each message by
   ``hybrid_reduce`` before the WAN hop; the model finishes on the cloud.
 
-Cost model: the scenario's *service model* prices the produce and cloud
-stages from task FLOPs / tier FLOP/s with the same ``EDGE_FLOPS`` /
-``DEVICE_FLOPS`` constants the :class:`PlacementEngine` uses, so emulated
-throughput and the engine's ``compare_tiers`` estimates are mutually
-consistent (tested in ``tests/test_sim.py``).
+Cost model: everything is priced by the unified :mod:`repro.cost`
+subsystem. ``WAN_BANDS`` below is an import-time snapshot of the shared
+:data:`repro.cost.profiles.WAN_BANDS` link table (the same one
+``PlacementEngine``'s ``DEFAULT_LINKS`` reads — pinned equal by a
+regression test), and the built-in ``ModelSpec``s (``KMEANS`` /
+``AUTOENCODER`` / ``ISOFOREST``) are derived from the committed kernel
+calibration — FLOP costs measured from the compiled ``repro.ml`` kernels
+via roofline HLO analysis, not hand-tuned constants — so emulated
+throughput, the engine's ``compare_tiers`` estimates and the
+:class:`~repro.cost.advisor.PlacementAdvisor` are all mutually consistent.
+
+``Scenario(service_sigma=...)`` enables the calibrated lognormal
+service-time noise (e.g. ``service_sigma=KMEANS.sigma``): stage charges
+jitter straggler-realistically but remain bit-reproducible for a seed.
 
 Dynamism scenarios: ``failures`` injects consumer crashes (or silent node
 loss the heartbeat monitor must detect) mid-run; ``autoscale`` attaches a
@@ -45,17 +54,20 @@ from repro.core.executor import SimExecutor
 from repro.core.faas import EdgeToCloudPipeline
 from repro.core.monitoring import MetricsRegistry
 from repro.core.pilot import ComputeResource, PilotManager
-from repro.core.placement import (DEVICE_FLOPS, EDGE_FLOPS, LinkModel,
-                                  PlacementEngine, TaskProfile)
+from repro.core.placement import PlacementEngine, TaskProfile
+from repro.cost.calibrate import (DEFAULT_GEN_S_PER_POINT,
+                                  DEFAULT_HYBRID_REDUCE,
+                                  DEFAULT_PREPROCESS_FLOPS_PER_POINT)
+from repro.cost.model import CostModel, default_cost_model
+from repro.cost.profiles import WAN_BANDS as _WAN_LINKS
 from repro.ml.datagen import N_FEATURES, message_nbytes
-from repro.sim.clock import SimClock
 
 # the paper's iPerf band plus the constrained 10 Mbit/s point used for the
-# placement-sensitivity experiments; (bandwidth bits/s, RTT seconds)
+# placement-sensitivity experiments; (bandwidth bits/s, RTT seconds) —
+# derived from the shared repro.cost.profiles.WAN_BANDS link table
 WAN_BANDS: Dict[str, Tuple[float, float]] = {
-    "10mbit": (10e6, 0.150),
-    "50mbit": (50e6, 0.150),
-    "100mbit": (100e6, 0.140),
+    name: (link.bandwidth_bps, link.latency_s)
+    for name, link in _WAN_LINKS.items()
 }
 
 PLACEMENTS = ("edge", "cloud", "hybrid")
@@ -63,12 +75,22 @@ PLACEMENTS = ("edge", "cloud", "hybrid")
 
 @dataclass(frozen=True)
 class ModelSpec:
-    """Analytic cost of one processing model, per data point."""
+    """Cost of one processing model, per data point.
+
+    ``flops_per_point`` is *peak-rate-equivalent* work (kernel HLO flops ×
+    per-message invocations / achieved efficiency) so service time is
+    simply ``flops / tier peak rate``; ``sigma`` is the calibrated
+    lognormal service-noise parameter (opt in via
+    ``Scenario(service_sigma=spec.sigma)``).
+    """
     name: str
-    flops_per_point: float          # full model cost
+    flops_per_point: float          # full model cost (peak-equivalent)
     output_bytes: int               # serialized model output per message
-    hybrid_reduce: int = 10         # edge pre-aggregation shrink factor
-    preprocess_flops_per_point: float = 200.0
+    # edge pre-aggregation defaults shared with ModelCost (defined once,
+    # in the cost subsystem)
+    hybrid_reduce: int = DEFAULT_HYBRID_REDUCE
+    preprocess_flops_per_point: float = DEFAULT_PREPROCESS_FLOPS_PER_POINT
+    sigma: float = 0.0              # lognormal service-noise (log-space)
 
     def task_profile(self, n_points: int) -> TaskProfile:
         """The what-the-placement-engine-sees view of one message."""
@@ -80,17 +102,31 @@ class ModelSpec:
             output_tier="cloud")
 
 
-# k-means assignment+update: ~2·k·d FLOPs/point × a handful of Lloyd
-# iterations — cheap per byte, i.e. transfer-bound (paper Fig 3 left).
-KMEANS = ModelSpec("kmeans", flops_per_point=8_000.0,
-                   output_bytes=25 * N_FEATURES * 8)
-# autoencoder minibatch training: forward+backward over the dense stack ×
-# epochs — expensive per byte, i.e. compute-bound (paper Fig 3 right):
-# even the 10 Mbit/s link feeds points faster than the cloud tier trains
-# on them, so placement is WAN-insensitive.
-AUTOENCODER = ModelSpec("autoencoder", flops_per_point=6e7,
-                        output_bytes=2_048)
-MODELS: Dict[str, ModelSpec] = {m.name: m for m in (KMEANS, AUTOENCODER)}
+def model_specs(cost: Optional[CostModel] = None) -> Dict[str, ModelSpec]:
+    """Build the scenario ``ModelSpec`` table from a calibration — the
+    committed kernel calibration by default."""
+    cost = cost or default_cost_model()
+    return {
+        name: ModelSpec(
+            name=name,
+            flops_per_point=mc.effective_flops_per_point,
+            output_bytes=mc.output_bytes,
+            hybrid_reduce=mc.hybrid_reduce,
+            preprocess_flops_per_point=mc.preprocess_flops_per_point,
+            sigma=mc.sigma)
+        for name, mc in cost.costs.items()
+    }
+
+
+MODELS: Dict[str, ModelSpec] = model_specs()
+# k-means assignment+update is cheap per byte — transfer-bound (paper
+# Fig 3 left); the autoencoder (100 PyOD epochs per batch) is expensive
+# per byte — compute-bound (Fig 3 right): even the 10 Mbit/s link feeds
+# points faster than the cloud tier trains on them; the isolation forest
+# sits in between (still transfer-bound).
+KMEANS = MODELS["kmeans"]
+AUTOENCODER = MODELS["autoencoder"]
+ISOFOREST = MODELS["isoforest"]
 
 
 @dataclass(frozen=True)
@@ -108,19 +144,29 @@ class FailureSpec:
 
 @dataclass(frozen=True)
 class Scenario:
-    model: ModelSpec = KMEANS
+    """One Fig-3 cell.  ``cost`` re-prices tier rates and WAN links; it
+    does *not* reach inside ``model`` — when sweeping a custom
+    calibration, pair it with a matching spec
+    (``model=model_specs(cost)[name]``), as the PlacementAdvisor does."""
+    model: ModelSpec = KMEANS                 # calibrated k-means
     placement: str = "cloud"                  # edge | cloud | hybrid
     wan_band: str = "100mbit"                 # key into WAN_BANDS
     n_messages: int = 64
     n_devices: int = 4                        # edge devices == partitions
     n_consumers: Optional[int] = None         # default: n_devices
     n_points: int = 2_500                     # points per message
-    gen_s_per_point: float = 2e-6             # Mini-App generation cost
+    gen_s_per_point: float = DEFAULT_GEN_S_PER_POINT  # Mini-App gen cost
     failures: Tuple[FailureSpec, ...] = ()
     autoscale: Optional[ScalePolicy] = None   # lag-driven resize in the DES
     autoscale_interval_s: float = 0.2
     seed: int = 0
     t_max_s: float = 36_000.0                 # virtual-time safety cap
+    service_sigma: float = 0.0                # lognormal stage noise (0=off)
+    cost: Optional[CostModel] = None          # default: shared calibration
+
+    @property
+    def cost_model(self) -> CostModel:
+        return self.cost or default_cost_model()
 
     def label(self) -> str:
         return (f"{self.model.name}/{self.placement}/{self.wan_band}"
@@ -164,9 +210,11 @@ def _edge_compute_s(sc: Scenario) -> float:
     """Per-message edge-stage service time for the scenario's placement."""
     m = sc.model
     if sc.placement == "edge":
-        return m.flops_per_point * sc.n_points / EDGE_FLOPS
+        return sc.cost_model.compute_s(m.flops_per_point * sc.n_points,
+                                       "edge")
     if sc.placement == "hybrid":
-        return m.preprocess_flops_per_point * sc.n_points / EDGE_FLOPS
+        return sc.cost_model.compute_s(
+            m.preprocess_flops_per_point * sc.n_points, "edge")
     return 0.0
 
 
@@ -175,10 +223,10 @@ def _cloud_compute_s(sc: Scenario) -> float:
     m = sc.model
     if sc.placement == "edge":
         # results only need ingesting/merging on the cloud side
-        return m.output_bytes / 8 * 50.0 / DEVICE_FLOPS
+        return sc.cost_model.ingest_bytes_s(m.output_bytes, "cloud")
     points = sc.n_points if sc.placement == "cloud" \
         else max(sc.n_points // m.hybrid_reduce, 1)
-    return m.flops_per_point * points / DEVICE_FLOPS
+    return sc.cost_model.compute_s(m.flops_per_point * points, "cloud")
 
 
 def _payload(sc: Scenario) -> np.ndarray:
@@ -193,29 +241,31 @@ def _payload(sc: Scenario) -> np.ndarray:
 
 
 def _service_model(sc: Scenario):
-    """Stage → virtual service seconds, priced like the PlacementEngine."""
+    """Stage → virtual service seconds, priced by the shared CostModel
+    (optionally with the calibrated lognormal noise)."""
     produce_s = sc.gen_s_per_point * sc.n_points + _edge_compute_s(sc)
     cloud_s = _cloud_compute_s(sc)
+    return sc.cost_model.service_model(
+        {"produce": produce_s, "process_cloud": cloud_s},
+        sigma=sc.service_sigma, seed=sc.seed)
 
-    def model(stage, ctx, payload):
-        if stage == "produce":
-            return produce_s
-        if stage == "process_cloud":
-            return cloud_s
-        return 0.0
 
-    return model
+def _wan_link(sc: Scenario):
+    """The scenario's WAN band from *its* cost model's profile (a custom
+    ContinuumProfile re-prices the transfer side too, not just compute)."""
+    bands = sc.cost_model.profile.wan_bands
+    if sc.wan_band not in bands:
+        raise ValueError(f"unknown wan_band {sc.wan_band!r}; "
+                         f"known: {sorted(bands)}")
+    return bands[sc.wan_band]
 
 
 def placement_estimates(sc: Scenario) -> Dict[str, float]:
     """PlacementEngine per-tier completion-time estimates for one message
     of this scenario, priced over this scenario's WAN band."""
-    bw_bps, rtt = WAN_BANDS[sc.wan_band]
-    links = {("edge", "cloud"): LinkModel(bandwidth=bw_bps / 8.0,
-                                          latency_s=rtt),
-             ("edge", "hpc"): LinkModel(bandwidth=bw_bps / 8.0,
-                                        latency_s=rtt)}
-    eng = PlacementEngine(links=links)
+    wan = _wan_link(sc)
+    links = {("edge", "cloud"): wan, ("edge", "hpc"): wan}
+    eng = PlacementEngine(links=links, cost_model=sc.cost_model)
     mgr = PilotManager(devices=())
     edge = mgr.submit_pilot(ComputeResource(tier="edge",
                                             n_workers=sc.n_devices))
@@ -230,11 +280,10 @@ def build_pipeline(sc: Scenario):
     """Construct the genuine pipeline + SimExecutor for one scenario.
     Returns ``(pipeline, executor, manager)`` — run with
     ``pipeline.run(n_messages=sc.n_messages, scheduler=executor)``."""
+    from repro.sim.clock import SimClock
     if sc.placement not in PLACEMENTS:
         raise ValueError(f"placement must be one of {PLACEMENTS}")
-    if sc.wan_band not in WAN_BANDS:
-        raise ValueError(f"unknown wan_band {sc.wan_band!r}; "
-                         f"known: {sorted(WAN_BANDS)}")
+    wan = _wan_link(sc)
     clock = SimClock()
     metrics = MetricsRegistry(clock=clock)
     mgr = PilotManager(devices=(), clock=clock)
@@ -243,7 +292,7 @@ def build_pipeline(sc: Scenario):
     n_cons = sc.n_consumers or sc.n_devices
     cloud = mgr.submit_pilot(ComputeResource(tier="cloud",
                                              n_workers=n_cons))
-    bw_bps, rtt = WAN_BANDS[sc.wan_band]
+    bw_bps, rtt = wan.bandwidth_bps, wan.latency_s
     payload = _payload(sc)
     pipe = EdgeToCloudPipeline(
         pilot_cloud_processing=cloud, pilot_edge=edge,

@@ -7,9 +7,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip(
-    "hypothesis",
-    reason="property tests need hypothesis (see requirements-test.txt)")
+# no custom reason=: pytest's default "could not import 'hypothesis'"
+# message is what tools/check_skips.py keys its missing-dependency and
+# known-image-gap detection on
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.configs import get_arch

@@ -13,9 +13,9 @@ from repro.core import (Broker, ComputeResource, ConsumerGroup,
                         as_clock)
 from repro.core.placement import LinkModel, PlacementEngine
 from repro.sim import PARK, ActorKilled, EventScheduler
-from repro.sim.scenarios import (AUTOENCODER, KMEANS, FailureSpec, Scenario,
-                                 format_table, placement_estimates,
-                                 run_scenario, sweep)
+from repro.sim.scenarios import (AUTOENCODER, ISOFOREST, KMEANS,
+                                 FailureSpec, Scenario, format_table,
+                                 placement_estimates, run_scenario, sweep)
 
 
 # ---------------------------------------------------------------------------
@@ -393,9 +393,13 @@ def test_fig3_autoencoder_wan_insensitive():
 
 def test_placement_engine_agrees_with_emulation():
     """The cost model the PlacementEngine prices placements with must give
-    the same qualitative answer as the emulator (same FLOPS constants)."""
+    the same qualitative answer as the emulator (both read the shared
+    repro.cost calibration — one oracle, not two)."""
     est_k = placement_estimates(Scenario(model=KMEANS, wan_band="10mbit"))
     assert est_k["edge"] < est_k["cloud"]       # k-means: stay on the edge
+    est_i = placement_estimates(Scenario(model=ISOFOREST,
+                                         wan_band="10mbit"))
+    assert est_i["edge"] < est_i["cloud"]       # iforest: transfer-bound too
     for band in ("10mbit", "100mbit"):
         est_a = placement_estimates(Scenario(model=AUTOENCODER,
                                              wan_band=band))

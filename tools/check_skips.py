@@ -7,13 +7,24 @@ test summary's SKIPPED lines. Skips caused by a *missing dependency*
 mode ROADMAP flags) fail the job; intentional skips (platform guards,
 explicit markers) pass through.
 
+Local vs CI behaviour: the dev container image is known to lack
+``hypothesis`` (it is in ``requirements-test.txt`` and installed in CI),
+so *known image gaps* are downgraded to loud-but-passing warnings when
+run outside CI. In CI (the ``CI`` env var is set, as on GitHub Actions)
+or with ``--strict`` every missing-dependency skip fails, keeping the
+gap visible where it must be fixed. ``--warn-only`` downgrades
+everything (exit 0) for exploratory local runs.
+
 Usage::
 
     PYTHONPATH=src python -m pytest -rs -q | tee pytest.log
     python tools/check_skips.py pytest.log
+    python tools/check_skips.py --strict pytest.log      # force CI mode
+    python tools/check_skips.py --warn-only pytest.log   # never fail
 """
 from __future__ import annotations
 
+import os
 import re
 import sys
 
@@ -22,36 +33,74 @@ MISSING_DEP = re.compile(
     r"could not import|No module named|not installed|"
     r"unable to import|requires the .* package", re.IGNORECASE)
 
+# dependencies knowingly absent from the dev container image but present
+# in CI (requirements-test.txt): visible locally as warnings, enforced in
+# CI as failures. Matched against the *import-error clause* (the exact
+# module name next to it), never the whole line, so neither a path that
+# contains the word nor a package that merely starts with it
+# (hypothesis_jsonschema) can mask a genuinely new missing dependency.
+KNOWN_IMAGE_GAPS = ("hypothesis",)
+
+_GAP = (r"['\"]?(?:" + "|".join(re.escape(d) for d in KNOWN_IMAGE_GAPS)
+        + r")(?![\w.])['\"]?")
+_KNOWN_GAP_RE = re.compile(
+    r"(?:could not import|No module named|unable to import)\s*:?\s*"
+    + _GAP
+    + r"|" + _GAP + r"\s+(?:is\s+)?not installed"
+    + r"|requires the\s+" + _GAP + r"\s+package", re.IGNORECASE)
+
 SKIP_LINE = re.compile(r"^SKIPPED\s*(\[\d+\])?\s*(?P<rest>.*)$")
 
 
-def check(lines) -> int:
-    bad, intentional = [], []
+def check(lines, *, strict: bool = True, warn_only: bool = False) -> int:
+    bad, known, intentional = [], [], []
     for line in lines:
         m = SKIP_LINE.match(line.strip())
         if not m:
             continue
         rest = m.group("rest")
-        (bad if MISSING_DEP.search(rest) else intentional).append(rest)
+        if not MISSING_DEP.search(rest):
+            intentional.append(rest)
+        elif not strict and _KNOWN_GAP_RE.search(rest):
+            known.append(rest)
+        else:
+            bad.append(rest)
     for s in intentional:
         print(f"skip (intentional): {s}")
+    for s in known:
+        print(f"skip (known image gap — CI installs it and enforces): {s}")
     for s in bad:
         print(f"skip (MISSING DEPENDENCY): {s}")
     if bad:
-        print(f"\nFAIL: {len(bad)} test(s) skipped because a dependency "
-              f"is missing — install it in the CI image "
-              f"(see requirements-test.txt).")
-        return 1
+        print(f"\n{'WARN' if warn_only else 'FAIL'}: {len(bad)} test(s) "
+              f"skipped because a dependency is missing — install it in "
+              f"the CI image (see requirements-test.txt).")
+        return 0 if warn_only else 1
     print(f"OK: {len(intentional)} intentional skip(s), "
-          f"no missing-dependency skips.")
+          f"{len(known)} known image-gap skip(s), "
+          f"no enforced missing-dependency skips.")
     return 0
 
 
 def main(argv) -> int:
-    if len(argv) > 1:
-        with open(argv[1]) as f:
-            return check(f)
-    return check(sys.stdin)
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("log", nargs="?", default=None,
+                    help="pytest -rs log file (default: stdin)")
+    mode = ap.add_mutually_exclusive_group()
+    mode.add_argument("--strict", action="store_true",
+                      help="fail on every missing-dependency skip, "
+                           "including known image gaps (the CI default)")
+    mode.add_argument("--warn-only", action="store_true",
+                      help="report but never fail (exploratory runs)")
+    args = ap.parse_args(argv[1:])
+    # truthy CI only: CI=false / CI=0 (common opt-outs) stay local mode
+    in_ci = os.environ.get("CI", "").lower() in ("1", "true", "yes")
+    strict = args.strict or (not args.warn_only and in_ci)
+    if args.log:
+        with open(args.log) as f:
+            return check(f, strict=strict, warn_only=args.warn_only)
+    return check(sys.stdin, strict=strict, warn_only=args.warn_only)
 
 
 if __name__ == "__main__":
