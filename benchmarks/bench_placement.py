@@ -1,8 +1,12 @@
 """DES-backed placement-advisor sweep: for each calibrated workload the
 :class:`~repro.cost.advisor.PlacementAdvisor` emulates the *real*
 ``EdgeToCloudPipeline`` under ``SimExecutor`` across
-{edge, cloud, hybrid} × {10/50/100 Mbit/s WAN} and ranks the placements by
-predicted throughput — the paper's "evaluate task placement based on
+{edge, cloud, hybrid} × {10/50/100 Mbit/s WAN} — each cell with the
+workload's calibrated lognormal service noise — and ranks the placements
+multi-objectively (throughput + p50/p95/p99 latency tail + WAN bytes,
+optionally under ``--latency-budget`` / ``--wan-budget`` constraints and
+a ``--hybrid-reduce`` sweep, with ``--speculative-factor`` straggler
+speculation in the loop) — the paper's "evaluate task placement based on
 multiple factors" claim as a reproducible benchmark::
 
     PYTHONPATH=src python benchmarks/bench_placement.py --check-determinism
@@ -28,8 +32,12 @@ def run_advisories(args):
     adv = PlacementAdvisor(n_messages=args.messages,
                            n_devices=args.devices,
                            n_points=args.points, seed=args.seed,
-                           service_sigma=args.service_sigma)
-    reports = [adv.advise(m, placements=args.placements, bands=args.bands)
+                           service_sigma=args.service_sigma,
+                           speculative_factor=args.speculative_factor)
+    reports = [adv.advise(m, placements=args.placements, bands=args.bands,
+                          latency_budget=args.latency_budget,
+                          wan_budget=args.wan_budget,
+                          hybrid_reduce=args.hybrid_reduce)
                for m in args.models]
     rows = [row for rep in reports for row in rep.rows()]
     return reports, rows
@@ -41,9 +49,23 @@ def main(argv=None) -> int:
     ap.add_argument("--devices", type=int, default=4)
     ap.add_argument("--points", type=int, default=2_500)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--service-sigma", type=float, default=0.0,
-                    help="lognormal service-noise sigma (0 = calibrated "
-                         "deterministic service times)")
+    ap.add_argument("--service-sigma", type=float, default=None,
+                    help="lognormal service-noise sigma (default: each "
+                         "workload's calibrated sigma from "
+                         "calibration.json; 0 = noise-free)")
+    ap.add_argument("--speculative-factor", type=float, default=0.0,
+                    help="DES straggler speculation: launch a backup for "
+                         "any service charge running past factor x the "
+                         "trailing median (0 = off)")
+    ap.add_argument("--latency-budget", type=float, default=None,
+                    help="cap predicted p95 latency (s): cells over "
+                         "budget are flagged infeasible and ranked last")
+    ap.add_argument("--wan-budget", type=float, default=None,
+                    help="cap advisory WAN megabytes per cell (same "
+                         "filter-then-rank semantics)")
+    ap.add_argument("--hybrid-reduce", type=int, nargs="+", default=None,
+                    help="sweep the hybrid placement's edge "
+                         "pre-aggregation factor over these values")
     # nargs='+': an empty list would make --check-determinism pass
     # vacuously on zero advisory cells
     ap.add_argument("--models", nargs="+", default=sorted(MODELS),
@@ -67,9 +89,11 @@ def main(argv=None) -> int:
         print(rep.table())
         for band in args.bands:
             best = rep.best(band)
+            flag = "" if best.feasible else " [over budget]"
             print(f"  -> {rep.model} @ {band}: place on "
                   f"{best.placement} ({best.throughput_msgs_s:.2f} msg/s, "
-                  f"p95 {best.latency_p95_s:.3f} s)")
+                  f"p95 {best.latency_p95_s:.3f} s, "
+                  f"p99 {best.latency_p99_s:.3f} s){flag}")
         print()
     print(f"{len(rows)} advisory cells in {wall*1e3:.0f} ms of wall time")
 

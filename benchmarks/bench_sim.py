@@ -45,6 +45,15 @@ def main(argv=None) -> int:
     ap.add_argument("--with-failures", action="store_true",
                     help="crash consumer 0 mid-run (restart after 1 s) "
                          "in every scenario")
+    ap.add_argument("--service-sigma", type=float, default=0.0,
+                    help="lognormal service-noise sigma for every model "
+                         "(0 = the noise-free Fig-3 pins)")
+    ap.add_argument("--calibrated-sigma", action="store_true",
+                    help="use each model's calibrated sigma from "
+                         "calibration.json instead of --service-sigma")
+    ap.add_argument("--speculative-factor", type=float, default=0.0,
+                    help="DES straggler speculation: backup any service "
+                         "charge past factor x trailing median (0 = off)")
     ap.add_argument("--check-determinism", action="store_true",
                     help="run the sweep three times; fail unless metrics "
                          "are identical across all runs")
@@ -57,7 +66,10 @@ def main(argv=None) -> int:
     kw = dict(models=[MODELS[m] for m in args.models],
               placements=args.placements, bands=args.bands,
               n_messages=args.messages, n_devices=args.devices,
-              n_points=args.points, seed=args.seed, failures=failures)
+              n_points=args.points, seed=args.seed, failures=failures,
+              service_sigma=(None if args.calibrated_sigma
+                             else args.service_sigma),
+              speculative_factor=args.speculative_factor)
 
     t0 = time.perf_counter()
     results = sweep(**kw)

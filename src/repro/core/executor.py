@@ -32,10 +32,19 @@ Two strategies interpret those effects:
 ``pipe.run(scheduler=SimExecutor(...))`` therefore exercises the *genuine*
 pipeline — same broker offsets, consumer-group rebalances, dedup and
 metrics stamps as production — under reproducible virtual time.
+
+Both strategies speculate on stragglers at service-charge granularity
+(``speculative_factor``, mirroring :class:`TaskRuntime`'s knob): a charge
+running past ``factor × trailing median`` races a backup draw of the
+service model, first completion wins, with deterministic win/loss/cancel
+accounting (see :class:`SpeculationStats`).
 """
 from __future__ import annotations
 
 import itertools
+import statistics
+import threading
+from collections import defaultdict
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
@@ -45,6 +54,88 @@ from repro.sim.scheduler import ActorKilled, EventScheduler
 
 # service_model(stage, ctx, payload) -> seconds of service time to charge
 ServiceModel = Callable[[str, TaskContext, Any], float]
+
+
+# ---------------------------------------------------------------------------
+# straggler speculation (shared between the strategies)
+# ---------------------------------------------------------------------------
+
+
+class SpeculationStats:
+    """Trailing per-stage service durations + win/loss accounting.
+
+    Mirrors :class:`~repro.core.runtime.TaskRuntime`'s straggler rule at
+    *service-charge* granularity: once a stage has ``min_samples``
+    completed charges, any charge still running past
+    ``speculative_factor × trailing median`` gets a backup launched with a
+    fresh service-model draw; the first completion wins.  Counters
+    (``runtime.speculative_launches`` / ``_wins`` / ``_losses`` /
+    ``_cancelled``) land in the run's MetricsRegistry; wins + losses +
+    cancelled always equals launches.
+    """
+
+    MIN_SAMPLES = 3          # TaskRuntime._median_duration's warmup bar
+    WINDOW = 256             # trailing window, trimmed like TaskRuntime
+
+    def __init__(self, factor: float, metrics):
+        self.factor = factor
+        self.metrics = metrics
+        self._durations: Dict[str, List[float]] = defaultdict(list)
+        self._lock = threading.Lock()
+
+    def record(self, stage: str, duration_s: float) -> None:
+        if duration_s <= 0.0:
+            return
+        with self._lock:
+            d = self._durations[stage]
+            d.append(duration_s)
+            if len(d) > self.WINDOW:
+                del d[:self.WINDOW // 2]
+
+    def threshold(self, stage: str) -> Optional[float]:
+        """``factor × trailing median`` — or None during warmup."""
+        with self._lock:
+            d = self._durations[stage]
+            if len(d) < self.MIN_SAMPLES:
+                return None
+            return self.factor * statistics.median(d)
+
+    # -- accounting -------------------------------------------------------
+
+    def launched(self) -> None:
+        self.metrics.incr("runtime.speculative_launches")
+
+    def resolved(self, backup_won: bool) -> None:
+        self.metrics.incr("runtime.speculative_wins" if backup_won
+                          else "runtime.speculative_losses")
+
+    def cancelled(self) -> None:
+        self.metrics.incr("runtime.speculative_cancelled")
+
+    # -- inline form (ThreadedExecutor) -----------------------------------
+
+    def charge(self, stage: str, primary_s: float,
+               redraw: Callable[[], float]) -> float:
+        """First-completion-wins arithmetic for a blocking strategy: a
+        charge that would run past the threshold launches a backup
+        (``redraw`` — a fresh draw of the same service model) at the
+        threshold, and the effective charge is whichever finishes first.
+        Threads can't race two sleeps for one generator step, so the race
+        is resolved inline — same accounting, same clock outcome as the
+        DES's event-scheduled race."""
+        if primary_s <= 0.0:
+            return primary_s
+        th = self.threshold(stage)
+        if th is None or primary_s <= th:
+            self.record(stage, primary_s)
+            return primary_s
+        self.launched()
+        backup_total = th + max(redraw(), 0.0)
+        backup_won = backup_total < primary_s
+        self.resolved(backup_won)
+        effective = min(primary_s, backup_total)
+        self.record(stage, effective)
+        return effective
 
 
 # ---------------------------------------------------------------------------
@@ -94,10 +185,21 @@ class ThreadedExecutor:
     throughput against the SimExecutor prediction); by default effects
     cost nothing and behaviour is identical to the historical
     thread-scheduled pipeline.
+
+    ``speculative_factor`` (default: the pipeline's) enables straggler
+    speculation at service-charge granularity when a service model is
+    set: a charge running past ``factor × trailing median`` launches a
+    backup draw, first completion wins (see :class:`SpeculationStats`).
+    Charge-level speculation supersedes :class:`TaskRuntime`'s whole-body
+    speculation (re-running an entire consumer loop only manufactures
+    duplicates), so the runtimes get ``speculative_factor=0`` then.
     """
 
-    def __init__(self, *, service_model: Optional[ServiceModel] = None):
+    def __init__(self, *, service_model: Optional[ServiceModel] = None,
+                 speculative_factor: Optional[float] = None):
         self.service_model = service_model
+        self.speculative_factor = speculative_factor
+        self.speculation: Optional[SpeculationStats] = None
 
     def run(self, pipe, *, n_messages: int, timeout_s: float,
             collect_results: bool):
@@ -112,6 +214,22 @@ class ThreadedExecutor:
                 "scheduler=SimExecutor(...) for auto-advance virtual time")
         state = pipe._setup_run(n_messages, timeout_s, collect_results)
         t0 = clock.now()
+        factor = (self.speculative_factor
+                  if self.speculative_factor is not None
+                  else pipe._runtime_kw["speculative_factor"])
+        runtime_kw = dict(pipe._runtime_kw)
+        # per-run reset: a reused executor must not carry the previous
+        # pipeline's stats (or metrics registry) into this run
+        self.speculation = None
+        # the executor-level factor overrides the pipeline's for *all*
+        # speculation (an explicit 0.0 disables it outright, matching
+        # SimExecutor); with a service model the charge-level race
+        # supersedes TaskRuntime's whole-body speculation, without one
+        # the runtimes speculate bodies at the resolved factor
+        runtime_kw["speculative_factor"] = factor
+        if factor > 0 and self.service_model is not None:
+            self.speculation = SpeculationStats(factor, pipe.metrics)
+            runtime_kw["speculative_factor"] = 0.0
 
         def interpret(ctx: TaskContext, eff: Any) -> Any:
             if isinstance(eff, Sleep):
@@ -120,6 +238,11 @@ class ThreadedExecutor:
             if isinstance(eff, Service):
                 s = (self.service_model(eff.stage, ctx, eff.payload)
                      if self.service_model else 0.0)
+                if self.speculation is not None and s > 0:
+                    s = self.speculation.charge(
+                        eff.stage, s,
+                        lambda: self.service_model(eff.stage, ctx,
+                                                   eff.payload))
                 if s > 0:
                     clock.sleep(s)
                 return None
@@ -129,9 +252,9 @@ class ThreadedExecutor:
             raise TypeError(f"unknown pipeline effect {eff!r}")
 
         edge_rt = TaskRuntime(pipe.pilot_edge, pipe.metrics,
-                              interpreter=interpret, **pipe._runtime_kw)
+                              interpreter=interpret, **runtime_kw)
         cloud_rt = TaskRuntime(pipe.pilot_cloud, pipe.metrics,
-                               interpreter=interpret, **pipe._runtime_kw)
+                               interpreter=interpret, **runtime_kw)
         producer_futs = [
             edge_rt.submit(pipe._producer_body, state, i,
                            state.per_device[i])
@@ -197,6 +320,38 @@ class _PollWait:
         self.timeout_ev = None
 
 
+class _ServiceOp:
+    """One in-flight Service charge racing an (eventual) speculative
+    backup.  ``primary_ev`` fires at the primary draw's completion;
+    ``check_ev`` fires at ``factor × trailing median`` and launches the
+    backup if the primary hasn't finished; ``backup_ev`` fires at the
+    backup's completion.  Whichever completion event fires first resolves
+    the op, cancels the loser, and resumes the actor."""
+
+    __slots__ = ("rec", "actor", "stage", "ctx", "payload", "t0",
+                 "primary_ev", "check_ev", "backup_ev", "backup_launched",
+                 "resolved")
+
+    def __init__(self, rec: dict, actor, stage: str, payload: Any,
+                 t0: float):
+        self.rec = rec
+        self.actor = actor
+        self.stage = stage
+        self.payload = payload
+        self.t0 = t0
+        self.primary_ev = None
+        self.check_ev = None
+        self.backup_ev = None
+        self.backup_launched = False
+        self.resolved = False
+
+    def cancel_events(self) -> None:
+        for ev in (self.primary_ev, self.check_ev, self.backup_ev):
+            if ev is not None:
+                ev.cancel()
+        self.primary_ev = self.check_ev = self.backup_ev = None
+
+
 class SimExecutor:
     """Single-threaded DES strategy: the whole pipeline run — producers,
     consumers, WAN visibility, heartbeat monitoring, retries, crash
@@ -222,6 +377,15 @@ class SimExecutor:
         ``autoscale_interval_s`` of virtual time; after each resize the
         executor grows/shrinks the live consumer pool to the pilot's
         worker count (scaling decisions visibly change the dataflow).
+    speculative_factor: straggler speculation at service-charge
+        granularity (default: the pipeline's ``speculative_factor``,
+        mirroring :class:`TaskRuntime`'s knob under virtual time).  A
+        Service charge still running past ``factor × trailing median``
+        of its stage's completed charges spawns a backup — a fresh draw
+        of the service model racing the primary as scheduled events,
+        first completion wins (see :class:`SpeculationStats`).  Win /
+        loss / cancel counts land in the run metrics and stay
+        bit-identical across repeats.
     """
 
     def __init__(self, clock: Optional[SimClock] = None, *,
@@ -230,7 +394,8 @@ class SimExecutor:
                  crash_plan: Sequence[Any] = (),
                  autoscaler=None,
                  autoscale_interval_s: float = 0.2,
-                 monitor_interval_s: float = 0.5):
+                 monitor_interval_s: float = 0.5,
+                 speculative_factor: Optional[float] = None):
         self.clock = clock
         self.service_model = service_model
         self.producer_offsets = tuple(producer_offsets)
@@ -238,6 +403,8 @@ class SimExecutor:
         self.autoscaler = autoscaler
         self.autoscale_interval_s = autoscale_interval_s
         self.monitor_interval_s = monitor_interval_s
+        self.speculative_factor = speculative_factor
+        self.speculation: Optional[SpeculationStats] = None
         self.sched: Optional[EventScheduler] = None
 
     def run(self, pipe, *, n_messages: int, timeout_s: float,
@@ -275,6 +442,12 @@ class _SimRun:
         self._task_seq = itertools.count()
         self._consumer_seq = itertools.count(pipe.cloud_consumers)
         self.shared: dict = {}
+        factor = (ex.speculative_factor if ex.speculative_factor is not None
+                  else pipe._runtime_kw["speculative_factor"])
+        self.speculation = (SpeculationStats(factor, pipe.metrics)
+                            if factor > 0 and ex.service_model is not None
+                            else None)
+        ex.speculation = self.speculation
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -307,6 +480,11 @@ class _SimRun:
             state.t_done = min(self.clock.now(), deadline)
         state.stop.set()
         state.topic.unsubscribe(self._on_append)
+        # unresolved speculation races at run end: the loser was never
+        # decided — account the launched backups as cancelled so
+        # wins + losses + cancelled always equals launches
+        for rec in list(self.tasks.values()):
+            self._cancel_service(rec)
         return pipe._finish(state, state.t_done - t0)
 
     # -- task spawning -----------------------------------------------------
@@ -319,7 +497,7 @@ class _SimRun:
         rec = {"task_id": f"{pilot.pilot_id}-sim-{next(self._task_seq)}",
                "kind": kind, "cid": cid, "make_body": body, "pilot": pilot,
                "attempt": 0, "retries_left": self.max_retries,
-               "actor": None, "ctx": None, "wait": None,
+               "actor": None, "ctx": None, "wait": None, "svc": None,
                "last_beat": self.clock.now(), "exit_reason": None}
         self.tasks[rec["task_id"]] = rec
         if kind == "consumer":
@@ -372,6 +550,9 @@ class _SimRun:
             model = self.ex.service_model
             secs = (model(eff.stage, rec["ctx"], eff.payload)
                     if model is not None else 0.0)
+            if self.speculation is not None and secs > 0.0:
+                self._begin_service(rec, actor, eff, max(secs, 0.0))
+                return
             actor.resume(None, delay=max(secs, 0.0))
             return
         if isinstance(eff, Poll):
@@ -444,6 +625,67 @@ class _SimRun:
             if wait is not None and not wait.resolved:
                 self._wake(wait, False)
 
+    # -- speculative Service races ----------------------------------------
+
+    def _begin_service(self, rec: dict, actor, eff: Service,
+                       primary_s: float) -> None:
+        """Charge a Service effect as a cancellable completion event so a
+        speculative backup can race it (the no-speculation path stays the
+        plain ``resume(delay=secs)`` — identical event count)."""
+        op = _ServiceOp(rec, actor, eff.stage, eff.payload,
+                        self.clock.now())
+        rec["svc"] = op
+        op.primary_ev = self.sched.after(
+            primary_s, lambda: self._svc_done(op, backup_won=False))
+        th = self.speculation.threshold(eff.stage)
+        # schedule the straggler check even when threshold >= primary_s:
+        # the DES doesn't peek at the draw, it observes the deadline pass
+        # (the completion event fires first and cancels the check)
+        if th is not None:
+            op.check_ev = self.sched.after(
+                th, lambda: self._svc_speculate(op))
+
+    def _svc_speculate(self, op: _ServiceOp) -> None:
+        """The primary charge outlived ``factor × median``: launch the
+        backup — a fresh draw of the service model — and let the two
+        completion events race."""
+        op.check_ev = None
+        if op.resolved or not op.actor.alive or self.state.stop.is_set():
+            return
+        backup_s = max(self.ex.service_model(op.stage, op.rec["ctx"],
+                                             op.payload), 0.0)
+        op.backup_launched = True
+        self.speculation.launched()
+        self._beat(op.rec)                 # the backup is making progress
+        op.backup_ev = self.sched.after(
+            backup_s, lambda: self._svc_done(op, backup_won=True))
+
+    def _svc_done(self, op: _ServiceOp, backup_won: bool) -> None:
+        if op.resolved or not op.actor.alive:
+            return
+        op.resolved = True
+        op.cancel_events()
+        op.rec["svc"] = None
+        if op.backup_launched:
+            self.speculation.resolved(backup_won)
+        self.speculation.record(op.stage, self.clock.now() - op.t0)
+        self._beat(op.rec)
+        op.actor.resume(None)
+
+    def _cancel_service(self, rec: dict) -> None:
+        """Abort an in-flight Service race (actor died / run ended): a
+        launched-but-unresolved backup counts as cancelled."""
+        op = rec["svc"]
+        if op is None:
+            return
+        rec["svc"] = None
+        if op.resolved:
+            return
+        op.resolved = True
+        op.cancel_events()
+        if op.backup_launched:
+            self.speculation.cancelled()
+
     def _clear_wait(self, rec: dict) -> None:
         wait = rec["wait"]
         if wait is not None:
@@ -468,6 +710,7 @@ class _SimRun:
     def _on_exit(self, rec: dict, exc: Optional[BaseException]) -> None:
         rec["actor"] = None
         self._clear_wait(rec)
+        self._cancel_service(rec)
         if exc is None:
             self.tasks.pop(rec["task_id"], None)
             self.metrics.incr("runtime.completed")
@@ -518,6 +761,7 @@ class _SimRun:
                 # heartbeat monitor can notice (frozen last_beat)
                 rec["actor"].drop()
                 self._clear_wait(rec)
+                self._cancel_service(rec)
                 self._release_inflight(rec)
             else:
                 rec["exit_reason"] = "crash"
@@ -547,6 +791,7 @@ class _SimRun:
             if now - rec["last_beat"] > self.heartbeat_timeout_s:
                 rec["actor"].drop()
                 rec["actor"] = None
+                self._cancel_service(rec)
                 if rec["kind"] == "consumer":
                     self._release_inflight(rec)
                     # session timeout: rebalance the lost member out

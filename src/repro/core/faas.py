@@ -306,7 +306,10 @@ class EdgeToCloudPipeline:
     def run(self, n_messages: Optional[int] = None,
             timeout_s: float = 600.0,
             collect_results: bool = True,
-            scheduler=None, placement: Optional[str] = None):
+            scheduler=None, placement: Optional[str] = None,
+            latency_budget: Optional[float] = None,
+            wan_budget: Optional[float] = None,
+            hybrid_reduce: Optional[List[int]] = None):
         """Drive ``n_messages`` end-to-end (default 512 — what the paper
         sends per run).
 
@@ -318,13 +321,19 @@ class EdgeToCloudPipeline:
         ``placement='advise'`` does not execute this pipeline at all:
         instead the :class:`~repro.cost.advisor.PlacementAdvisor` emulates
         a pipeline of this shape (devices/consumers; workload from
-        ``function_context['model']`` / ``['n_points']``) under its own
-        ``SimExecutor`` across placements × WAN bands and returns the
-        ranked :class:`~repro.cost.advisor.AdvisorReport` — the paper's
-        "evaluate task placement based on multiple factors" knob.  An
-        explicit ``n_messages`` sets the per-cell advisory fidelity
-        (default 32 — the whole grid in a few hundred ms); ``timeout_s``/
-        ``collect_results`` do not apply and ``scheduler`` is rejected.
+        ``function_context['model']`` / ``['n_points']``; straggler
+        speculation from this pipeline's ``speculative_factor``) under
+        its own ``SimExecutor`` across placements × WAN bands and returns
+        the ranked :class:`~repro.cost.advisor.AdvisorReport` — the
+        paper's "evaluate task placement based on multiple factors" knob,
+        multi-objectively: ``latency_budget`` caps predicted p95 latency
+        (seconds), ``wan_budget`` caps advisory WAN megabytes (cells over
+        budget are flagged infeasible and ranked last, never dropped),
+        and ``hybrid_reduce`` sweeps the hybrid placement's edge
+        pre-aggregation factor.  An explicit ``n_messages`` sets the
+        per-cell advisory fidelity (default 32 — the whole grid in a few
+        hundred ms); ``timeout_s``/``collect_results`` do not apply and
+        ``scheduler`` is rejected.
         """
         if placement == "advise":
             if scheduler is not None:
@@ -342,7 +351,14 @@ class EdgeToCloudPipeline:
             # which imports this module
             from repro.cost.advisor import PlacementAdvisor
             kw = {} if n_messages is None else {"n_messages": n_messages}
-            return PlacementAdvisor.from_pipeline(self, **kw).advise(model)
+            return PlacementAdvisor.from_pipeline(self, **kw).advise(
+                model, latency_budget=latency_budget,
+                wan_budget=wan_budget, hybrid_reduce=hybrid_reduce)
+        if (latency_budget is not None or wan_budget is not None
+                or hybrid_reduce is not None):
+            raise ValueError(
+                "latency_budget/wan_budget/hybrid_reduce are advisory "
+                "knobs — they only apply with placement='advise'")
         if placement is not None and placement != self.placement:
             raise ValueError(
                 f"unsupported run-time placement {placement!r} "

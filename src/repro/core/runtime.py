@@ -66,6 +66,7 @@ class _Attempt:
     started: float
     last_beat: float
     done: bool = False
+    speculative: bool = False
 
 
 class TaskFuture:
@@ -172,7 +173,8 @@ class TaskRuntime:
         attempt_no = fut.attempts
         fut.attempts += 1
         now = self._clock.now()
-        att = _Attempt(attempt_id=attempt_no, started=now, last_beat=now)
+        att = _Attempt(attempt_id=attempt_no, started=now, last_beat=now,
+                       speculative=speculative)
         with self._lock:
             rec["attempts"][attempt_no] = att
         if speculative:
@@ -201,6 +203,19 @@ class TaskRuntime:
                     del self._durations[:128]
             if fut._complete(result):
                 self.metrics.incr("runtime.completed")
+                if fut.speculated:
+                    # first-completion-wins accounting, resolved per
+                    # *launch* so wins + losses + cancelled == launches
+                    # even when the monitor speculated more than once: a
+                    # winning backup scores one win, every other backup
+                    # launched for this task lost its race
+                    n_spec = self._n_speculative(rec)
+                    if att.speculative:
+                        self.metrics.incr("runtime.speculative_wins")
+                        n_spec -= 1
+                    if n_spec > 0:
+                        self.metrics.incr("runtime.speculative_losses",
+                                          n_spec)
                 with self._lock:
                     self._inflight.pop(task_id, None)
 
@@ -230,6 +245,11 @@ class TaskRuntime:
     def _beat(self, att: _Attempt) -> None:
         att.last_beat = self._clock.now()
 
+    def _n_speculative(self, rec: dict) -> int:
+        with self._lock:
+            return sum(1 for a in rec["attempts"].values()
+                       if a.speculative)
+
     def _on_attempt_error(self, task_id: str, rec: dict,
                           err: BaseException) -> None:
         fut: TaskFuture = rec["future"]
@@ -249,6 +269,16 @@ class TaskRuntime:
             if fut._fail(TaskFailed(
                     f"{task_id} failed after {fut.attempts} attempts: "
                     f"{err!r}")):
+                if fut.speculated:
+                    # the task never completed: its backups' races were
+                    # never decided — cancelled, keeping the invariant
+                    # wins + losses + cancelled == launches (tasks still
+                    # in flight at process shutdown are real threads and
+                    # stay unaccounted; the DES has no such escape hatch)
+                    n_spec = self._n_speculative(rec)
+                    if n_spec > 0:
+                        self.metrics.incr("runtime.speculative_cancelled",
+                                          n_spec)
                 with self._lock:
                     self._inflight.pop(task_id, None)
 

@@ -7,9 +7,21 @@ model complexities, throughput, and latency)").
 :class:`~repro.core.executor.SimExecutor` across
 {placements} × {WAN bands} — real broker offsets, consumer groups, dedup,
 WAN token bucket, only time is virtual — and returns a ranked
-recommendation with predicted throughput/latency per cell.  Because every
-cell is a deterministic DES run, the recommendation is bit-identical
-across invocations.
+recommendation.  The ranking is **multi-objective**: every cell reports
+predicted throughput, the p50/p95/p99 latency tail, and exact WAN bytes;
+``latency_budget=`` / ``wan_budget=`` constraints *filter-then-rank*
+(feasible cells outrank infeasible ones, but infeasible cells stay in the
+report, flagged — an impossible budget yields a ranked-but-flagged
+recommendation, never an empty one).  ``hybrid_reduce=`` sweeps the hybrid
+placement's edge pre-aggregation factor the same way placements are swept.
+
+Tail fidelity: by default each cell runs with the workload's *calibrated*
+lognormal service noise (``calibration.json``'s per-model sigma — pass
+``service_sigma=0.0`` for the noise-free view) and can run the DES
+straggler speculation (``speculative_factor=``), so p95/p99 and the
+speculation win/loss counters reflect the straggler behaviour real edge
+deployments rank placements by.  Because every cell is a deterministic
+DES run, the recommendation is bit-identical across invocations.
 
 Entry points::
 
@@ -17,11 +29,17 @@ Entry points::
     report.best("10mbit").placement          # 'edge' (transfer-bound)
     print(report.table())
 
+    # budget-constrained, sweeping the hybrid pre-aggregation factor:
+    report = PlacementAdvisor().advise(
+        "kmeans", latency_budget=2.0, wan_budget=5.0,
+        hybrid_reduce=(5, 10, 20))
+
     # or straight from a pipeline (reads model/n_points from its context):
-    report = pipe.run(placement="advise")
+    report = pipe.run(placement="advise", latency_budget=2.0)
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Union
 
@@ -32,7 +50,7 @@ from repro.sim.scenarios import (PLACEMENTS, ModelSpec, Scenario,
 
 @dataclass(frozen=True)
 class Advice:
-    """One evaluated (placement, WAN band) cell."""
+    """One evaluated (placement, WAN band[, hybrid_reduce]) cell."""
     model: str
     placement: str
     wan_band: str
@@ -42,37 +60,69 @@ class Advice:
     wan_mbytes: float
     makespan_s: float
     tier_estimates: Dict[str, float] = field(default_factory=dict)
+    latency_p50_s: float = 0.0
+    latency_p99_s: float = 0.0
+    wan_bytes: float = 0.0
+    hybrid_reduce: Optional[int] = None   # set on hybrid cells only
+    feasible: bool = True                 # meets the advise() budgets
+    spec_launches: int = 0                # straggler speculation accounting
+    spec_wins: int = 0
+    spec_losses: int = 0
+    spec_cancelled: int = 0
 
     def row(self) -> Dict[str, object]:
         return {"model": self.model, "placement": self.placement,
                 "wan": self.wan_band,
                 "msgs_per_s": self.throughput_msgs_s,
                 "lat_mean_s": self.latency_mean_s,
+                "lat_p50_s": self.latency_p50_s,
                 "lat_p95_s": self.latency_p95_s,
+                "lat_p99_s": self.latency_p99_s,
                 "wan_mb": self.wan_mbytes,
-                "makespan_s": self.makespan_s}
+                "wan_bytes": self.wan_bytes,
+                "makespan_s": self.makespan_s,
+                "hybrid_reduce": self.hybrid_reduce,
+                "feasible": self.feasible,
+                "spec_launches": self.spec_launches,
+                "spec_wins": self.spec_wins,
+                "spec_losses": self.spec_losses,
+                "spec_cancelled": self.spec_cancelled}
 
 
 @dataclass
 class AdvisorReport:
-    """Ranked recommendation across placements × WAN bands."""
+    """Ranked recommendation across placements × WAN bands.
+
+    ``latency_budget`` / ``wan_budget`` record the constraints the cells
+    were judged against (None = unconstrained)."""
     model: str
     cells: List[Advice]
+    latency_budget: Optional[float] = None
+    wan_budget: Optional[float] = None
 
     def ranking(self, band: Optional[str] = None) -> List[Advice]:
-        """Cells (optionally one band's) by predicted throughput, best
-        first; ties broken by lower mean latency, then placement name so
-        the order is total and reproducible."""
+        """Cells (optionally one band's), budget-feasible cells first,
+        then by predicted throughput; ties broken by lower mean latency,
+        then placement name and hybrid_reduce so the order is total and
+        reproducible.  Infeasible cells are *ranked, not dropped* — an
+        impossible budget still yields a full (flagged) ranking."""
         cells = [c for c in self.cells
                  if band is None or c.wan_band == band]
-        return sorted(cells, key=lambda c: (-c.throughput_msgs_s,
-                                            c.latency_mean_s, c.placement))
+        return sorted(cells, key=lambda c: (not c.feasible,
+                                            -c.throughput_msgs_s,
+                                            c.latency_mean_s, c.placement,
+                                            c.hybrid_reduce or 0))
 
     def best(self, band: str) -> Advice:
         rank = self.ranking(band)
         if not rank:
             raise ValueError(f"no advice for band {band!r}")
         return rank[0]
+
+    def feasible_cells(self, band: Optional[str] = None) -> List[Advice]:
+        """The cells that meet both budgets (may be empty — ``best`` then
+        returns the least-bad infeasible cell, flagged)."""
+        return [c for c in self.ranking(band) if c.feasible]
 
     def rows(self) -> List[Dict[str, object]]:
         """JSON-able rows with per-band rank and the recommendation flag
@@ -88,17 +138,20 @@ class AdvisorReport:
         return out
 
     def table(self) -> str:
-        hdr = (f"{'model':>12} {'wan':>8} {'placement':>9} {'rank':>4} "
-               f"{'msg/s':>9} {'lat-mean s':>10} {'lat-p95 s':>9} "
-               f"{'WAN MB':>8}")
+        hdr = (f"{'model':>12} {'wan':>8} {'placement':>9} {'red':>4} "
+               f"{'rank':>4} {'msg/s':>9} {'lat-p50 s':>9} "
+               f"{'lat-p95 s':>9} {'lat-p99 s':>9} {'WAN MB':>8}")
         lines = [hdr, "-" * len(hdr)]
         for r in self.rows():
             mark = " <- recommended" if r["recommended"] else ""
+            if not r["feasible"]:
+                mark += " [over budget]"
+            red = "-" if r["hybrid_reduce"] is None else r["hybrid_reduce"]
             lines.append(
                 f"{r['model']:>12} {r['wan']:>8} {r['placement']:>9} "
-                f"{r['rank']:>4} {r['msgs_per_s']:>9.3f} "
-                f"{r['lat_mean_s']:>10.3f} {r['lat_p95_s']:>9.3f} "
-                f"{r['wan_mb']:>8.2f}{mark}")
+                f"{red:>4} {r['rank']:>4} {r['msgs_per_s']:>9.3f} "
+                f"{r['lat_p50_s']:>9.3f} {r['lat_p95_s']:>9.3f} "
+                f"{r['lat_p99_s']:>9.3f} {r['wan_mb']:>8.2f}{mark}")
         return "\n".join(lines)
 
 
@@ -106,12 +159,20 @@ class PlacementAdvisor:
     """Evaluate placements for a workload by emulating the real pipeline.
 
     ``n_messages`` trades prediction fidelity for advisory wall time (the
-    whole default grid runs in well under a second)."""
+    whole default grid runs in well under a second).
+
+    ``service_sigma=None`` (the default) applies each workload's
+    *calibrated* lognormal service noise — tail-latency columns reflect
+    the measured straggler behaviour, not a fiction of uniform service
+    times; pass ``0.0`` to rank on noise-free service times.
+    ``speculative_factor`` additionally runs the DES straggler
+    speculation in every cell (0 = off)."""
 
     def __init__(self, cost_model: Optional[CostModel] = None, *,
                  n_messages: int = 32, n_devices: int = 4,
                  n_consumers: Optional[int] = None, n_points: int = 2_500,
-                 seed: int = 0, service_sigma: float = 0.0):
+                 seed: int = 0, service_sigma: Optional[float] = None,
+                 speculative_factor: float = 0.0):
         self.cost = cost_model or default_cost_model()
         self.n_messages = n_messages
         self.n_devices = n_devices
@@ -119,21 +180,24 @@ class PlacementAdvisor:
         self.n_points = n_points
         self.seed = seed
         self.service_sigma = service_sigma
+        self.speculative_factor = speculative_factor
 
     @classmethod
     def from_pipeline(cls, pipe, *, n_messages: int = 32,
                       **kw) -> "PlacementAdvisor":
         """Build an advisor matching a pipeline's shape; the workload
-        (``model``, ``n_points``) is read from its ``function_context``
-        and the cost model from its placement engine (so the advisory and
+        (``model``, ``n_points``) is read from its ``function_context``,
+        the cost model from its placement engine (so the advisory and
         the engine's own scoring stay mutually consistent — note the
         engine's legacy ``edge_flops``/``device_flops``/``links``
         overrides are *not* part of its cost model and don't reach the
         advisory; customize via a ``CostModel`` on a custom profile
-        instead).
+        instead) and the straggler knob from its ``speculative_factor``.
         ``n_points`` must be declared (there or via ``kw``) — silently
         assuming a message size would misprice the transfer side."""
         kw.setdefault("cost_model", pipe.placement_engine.cost)
+        kw.setdefault("speculative_factor",
+                      pipe._runtime_kw["speculative_factor"])
         if "n_points" not in kw:
             n_points = pipe.context.get("n_points")
             if n_points is None:
@@ -146,7 +210,18 @@ class PlacementAdvisor:
 
     def advise(self, model: Union[str, ModelSpec] = "kmeans", *,
                placements: Sequence[str] = PLACEMENTS,
-               bands: Optional[Sequence[str]] = None) -> AdvisorReport:
+               bands: Optional[Sequence[str]] = None,
+               latency_budget: Optional[float] = None,
+               wan_budget: Optional[float] = None,
+               hybrid_reduce: Optional[Sequence[int]] = None
+               ) -> AdvisorReport:
+        """Sweep {placements} × {bands} (× {hybrid_reduce} for the hybrid
+        placement) and rank multi-objectively.
+
+        ``latency_budget`` caps predicted p95 end-to-end latency
+        (seconds); ``wan_budget`` caps megabytes through the WAN for the
+        whole advisory run.  Cells violating either are flagged
+        infeasible and rank after every feasible cell."""
         # resolve string names against *this advisor's* calibration (a
         # custom cost_model re-prices the specs, not just the tier rates)
         if isinstance(model, str):
@@ -160,19 +235,47 @@ class PlacementAdvisor:
             # table), ascending bandwidth rather than lexicographic
             table = self.cost.profile.wan_bands
             bands = sorted(table, key=lambda b: table[b].bandwidth)
+        reduces = tuple(int(x) for x in hybrid_reduce or ())
         for band in bands:
             for placement in placements:
-                r = run_scenario(Scenario(
-                    model=spec, placement=placement, wan_band=band,
-                    n_messages=self.n_messages, n_devices=self.n_devices,
-                    n_consumers=self.n_consumers, n_points=self.n_points,
-                    seed=self.seed, service_sigma=self.service_sigma,
-                    cost=self.cost))
-                cells.append(Advice(
-                    model=spec.name, placement=placement, wan_band=band,
-                    throughput_msgs_s=r.throughput_msgs_s,
-                    latency_mean_s=r.latency_mean_s,
-                    latency_p95_s=r.latency_p95_s,
-                    wan_mbytes=r.wan_mbytes, makespan_s=r.makespan_s,
-                    tier_estimates=dict(r.placement_estimates)))
-        return AdvisorReport(model=spec.name, cells=cells)
+                sweep = reduces if placement == "hybrid" and reduces \
+                    else (None,)
+                for red in sweep:
+                    mspec = (spec if red is None
+                             else dataclasses.replace(spec,
+                                                      hybrid_reduce=red))
+                    r = run_scenario(Scenario(
+                        model=mspec, placement=placement, wan_band=band,
+                        n_messages=self.n_messages,
+                        n_devices=self.n_devices,
+                        n_consumers=self.n_consumers,
+                        n_points=self.n_points,
+                        seed=self.seed, service_sigma=self.service_sigma,
+                        speculative_factor=self.speculative_factor,
+                        cost=self.cost))
+                    feasible = (
+                        (latency_budget is None
+                         or r.latency_p95_s <= latency_budget)
+                        and (wan_budget is None
+                             or r.wan_mbytes <= wan_budget))
+                    cells.append(Advice(
+                        model=spec.name, placement=placement,
+                        wan_band=band,
+                        throughput_msgs_s=r.throughput_msgs_s,
+                        latency_mean_s=r.latency_mean_s,
+                        latency_p50_s=r.latency_p50_s,
+                        latency_p95_s=r.latency_p95_s,
+                        latency_p99_s=r.latency_p99_s,
+                        wan_mbytes=r.wan_mbytes, wan_bytes=r.wan_bytes,
+                        makespan_s=r.makespan_s,
+                        hybrid_reduce=(mspec.hybrid_reduce
+                                       if placement == "hybrid" else None),
+                        feasible=feasible,
+                        spec_launches=r.spec_launches,
+                        spec_wins=r.spec_wins,
+                        spec_losses=r.spec_losses,
+                        spec_cancelled=r.spec_cancelled,
+                        tier_estimates=dict(r.placement_estimates)))
+        return AdvisorReport(model=spec.name, cells=cells,
+                             latency_budget=latency_budget,
+                             wan_budget=wan_budget)

@@ -161,12 +161,26 @@ class Scenario:
     autoscale_interval_s: float = 0.2
     seed: int = 0
     t_max_s: float = 36_000.0                 # virtual-time safety cap
-    service_sigma: float = 0.0                # lognormal stage noise (0=off)
+    # lognormal stage noise: 0 = off (the noise-free Fig-3 pins),
+    # None = the model's *calibrated* sigma from calibration.json (what
+    # the tail-aware PlacementAdvisor runs with)
+    service_sigma: Optional[float] = 0.0
+    # straggler speculation: a cloud/edge Service charge running past
+    # factor × trailing median spawns a backup, first completion wins
+    # (0 = off; mirrors TaskRuntime.speculative_factor under the DES)
+    speculative_factor: float = 0.0
     cost: Optional[CostModel] = None          # default: shared calibration
 
     @property
     def cost_model(self) -> CostModel:
         return self.cost or default_cost_model()
+
+    @property
+    def effective_service_sigma(self) -> float:
+        """The sigma actually applied: explicit value, or the model's
+        calibrated one when ``service_sigma`` is None."""
+        return (self.model.sigma if self.service_sigma is None
+                else self.service_sigma)
 
     def label(self) -> str:
         return (f"{self.model.name}/{self.placement}/{self.wan_band}"
@@ -188,6 +202,13 @@ class ScenarioResult:
     autoscale_events: List[dict] = field(default_factory=list)
     wall_ms: float = 0.0              # real milliseconds spent emulating
     metrics: MetricsRegistry = field(default=None, repr=False)
+    latency_p50_s: float = 0.0        # tail decomposition (multi-objective)
+    latency_p99_s: float = 0.0
+    wan_bytes: float = 0.0            # exact bytes through the topic
+    spec_launches: int = 0            # straggler speculation accounting
+    spec_wins: int = 0                # (wins + losses + cancelled == launches)
+    spec_losses: int = 0
+    spec_cancelled: int = 0
 
     def row(self) -> Dict[str, object]:
         """Deterministic summary — identical across runs at the same seed
@@ -200,9 +221,16 @@ class ScenarioResult:
             "makespan_s": self.makespan_s,
             "msgs_per_s": self.throughput_msgs_s,
             "lat_mean_s": self.latency_mean_s,
+            "lat_p50_s": self.latency_p50_s,
             "lat_p95_s": self.latency_p95_s,
+            "lat_p99_s": self.latency_p99_s,
             "wan_mb": self.wan_mbytes,
+            "wan_bytes": self.wan_bytes,
             "autoscale_actions": len(self.autoscale_events),
+            "spec_launches": self.spec_launches,
+            "spec_wins": self.spec_wins,
+            "spec_losses": self.spec_losses,
+            "spec_cancelled": self.spec_cancelled,
         }
 
 
@@ -247,7 +275,7 @@ def _service_model(sc: Scenario):
     cloud_s = _cloud_compute_s(sc)
     return sc.cost_model.service_model(
         {"produce": produce_s, "process_cloud": cloud_s},
-        sigma=sc.service_sigma, seed=sc.seed)
+        sigma=sc.effective_service_sigma, seed=sc.seed)
 
 
 def _wan_link(sc: Scenario):
@@ -302,6 +330,7 @@ def build_pipeline(sc: Scenario):
         cloud_consumers=n_cons, topic_name="e2c",
         wan_shaper=WanShaper(bandwidth_bps=bw_bps, rtt_s=rtt, sleep=False),
         metrics=metrics, clock=clock,
+        speculative_factor=sc.speculative_factor,
         # service times are priced by the service model, not heartbeats;
         # only explicit "silent" failure injection should trip the monitor
         heartbeat_timeout_s=(30.0 if any(f.kind == "silent"
@@ -341,6 +370,11 @@ def run_scenario(sc: Scenario) -> ScenarioResult:
     makespan = max(last - first, 1e-9)
     n_done = res.n_processed
     scaler = ex.autoscaler
+
+    def pct(q):
+        return lat[min(len(lat) - 1, int(q * len(lat)))] if lat else 0.0
+
+    wan_bytes = metrics.counter(f"topic.{pipe._topic.name}.bytes_in")
     return ScenarioResult(
         scenario=sc,
         n_processed=n_done,
@@ -348,10 +382,15 @@ def run_scenario(sc: Scenario) -> ScenarioResult:
         makespan_s=makespan,
         throughput_msgs_s=n_done / makespan,
         latency_mean_s=float(np.mean(lat)) if lat else 0.0,
-        latency_p95_s=lat[min(len(lat) - 1, int(0.95 * len(lat)))]
-        if lat else 0.0,
-        wan_mbytes=metrics.counter(
-            f"topic.{pipe._topic.name}.bytes_in") / 1e6,
+        latency_p50_s=pct(0.50),
+        latency_p95_s=pct(0.95),
+        latency_p99_s=pct(0.99),
+        wan_mbytes=wan_bytes / 1e6,
+        wan_bytes=wan_bytes,
+        spec_launches=int(metrics.counter("runtime.speculative_launches")),
+        spec_wins=int(metrics.counter("runtime.speculative_wins")),
+        spec_losses=int(metrics.counter("runtime.speculative_losses")),
+        spec_cancelled=int(metrics.counter("runtime.speculative_cancelled")),
         placement_estimates=placement_estimates(sc),
         autoscale_events=list(scaler.history) if scaler else [],
         wall_ms=(_walltime.perf_counter() - t_wall) * 1e3,
@@ -363,7 +402,9 @@ def sweep(models: Sequence[ModelSpec] = (KMEANS, AUTOENCODER),
           bands: Sequence[str] = ("10mbit", "50mbit", "100mbit"),
           *, n_messages: int = 64, n_devices: int = 4,
           n_points: int = 2_500, seed: int = 0,
-          failures: Tuple[FailureSpec, ...] = ()) -> List[ScenarioResult]:
+          failures: Tuple[FailureSpec, ...] = (),
+          service_sigma: Optional[float] = 0.0,
+          speculative_factor: float = 0.0) -> List[ScenarioResult]:
     """The Fig-3 grid: {models} × {placements} × {WAN bands}."""
     out = []
     for m in models:
@@ -372,7 +413,9 @@ def sweep(models: Sequence[ModelSpec] = (KMEANS, AUTOENCODER),
                 out.append(run_scenario(Scenario(
                     model=m, placement=p, wan_band=b,
                     n_messages=n_messages, n_devices=n_devices,
-                    n_points=n_points, seed=seed, failures=failures)))
+                    n_points=n_points, seed=seed, failures=failures,
+                    service_sigma=service_sigma,
+                    speculative_factor=speculative_factor)))
     return out
 
 

@@ -216,7 +216,48 @@ def test_runtime_straggler_speculation():
     assert hung.wait(5.0)
     assert _drive(clock, fut).result(1) == "backup"
     assert fut.speculated
-    assert rt.metrics.counter("runtime.speculative_launches") >= 1
+    m = rt.metrics
+    assert m.counter("runtime.speculative_launches") >= 1
+    # first-completion-wins accounting: the backup won, and every launch
+    # is accounted (wins + losses + cancelled == launches)
+    assert m.counter("runtime.speculative_wins") == 1
+    assert (m.counter("runtime.speculative_wins")
+            + m.counter("runtime.speculative_losses")
+            + m.counter("runtime.speculative_cancelled")
+            == m.counter("runtime.speculative_launches"))
+    clock.close()
+    rt.shutdown(wait=False)
+
+
+def test_runtime_speculation_cancelled_on_terminal_failure():
+    """A speculated task that never completes (backup attempts exhaust the
+    retries) resolves its launches as *cancelled*, keeping the accounting
+    identity for the whole-body path too."""
+    clock = SimClock(auto_advance=False)
+    rt = TaskRuntime(_edge_pilot(8), speculative_factor=3.0,
+                     max_retries=1, monitor_interval_s=0.01, clock=clock)
+    for f in rt.map(lambda ctx, x: x, range(6)):
+        f.result(5)
+    hung = threading.Event()
+
+    def doomed(ctx):
+        if ctx.attempt == 0:
+            hung.set()
+            ctx.clock.sleep(600.0)   # straggles → speculation fires
+            return "slow"
+        raise RuntimeError("backup blows up")   # → retries exhaust
+
+    fut = rt.submit(doomed)
+    assert hung.wait(5.0)
+    with pytest.raises(TaskFailed):
+        _drive(clock, fut).result(1)
+    m = rt.metrics
+    launches = m.counter("runtime.speculative_launches")
+    assert launches >= 1
+    assert m.counter("runtime.speculative_wins") == 0
+    assert (m.counter("runtime.speculative_losses")
+            + m.counter("runtime.speculative_cancelled") == launches)
+    assert m.counter("runtime.speculative_cancelled") >= 1
     clock.close()
     rt.shutdown(wait=False)
 

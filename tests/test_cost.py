@@ -302,6 +302,123 @@ def test_pipeline_run_placement_advise():
         PlacementAdvisor(n_messages=4).advise("kmean")
 
 
+def test_advisor_default_sigma_is_the_calibrated_one():
+    """Regression pin for the service_sigma plumbing: the advisor's
+    default is the *calibrated* per-model sigma (None → spec.sigma via
+    ``Scenario.effective_service_sigma``), not 0.0 — tail columns
+    reflect measured straggler noise unless explicitly disabled."""
+    adv = PlacementAdvisor(n_messages=16)
+    assert adv.service_sigma is None
+    default_rows = adv.advise("kmeans").rows()
+    explicit = PlacementAdvisor(n_messages=16,
+                                service_sigma=KMEANS.sigma)
+    assert default_rows == explicit.advise("kmeans").rows()
+    clean = PlacementAdvisor(n_messages=16, service_sigma=0.0)
+    assert default_rows != clean.advise("kmeans").rows()
+    # the Scenario-level contract the advisor rides on
+    assert Scenario(model=KMEANS).effective_service_sigma == 0.0
+    assert Scenario(model=KMEANS, service_sigma=None)\
+        .effective_service_sigma == KMEANS.sigma
+    assert KMEANS.sigma > 0.0
+
+
+def test_advisor_multi_objective_columns_and_latency_budget():
+    """The multi-objective path: p50/p95/p99 + WAN-byte columns are
+    populated and ordered, and kmeans→edge stays top-ranked at 10 Mbit/s
+    under a latency budget that kills the cloud cell."""
+    rep = PlacementAdvisor(n_messages=32).advise("kmeans",
+                                                 latency_budget=2.0)
+    assert rep.latency_budget == 2.0
+    for c in rep.cells:
+        assert (0.0 <= c.latency_p50_s <= c.latency_p95_s
+                <= c.latency_p99_s)
+        assert c.wan_bytes == pytest.approx(c.wan_mbytes * 1e6)
+    best = rep.best("10mbit")
+    assert best.placement == "edge" and best.feasible
+    # the 10 Mbit cloud cell blows a 2 s p95 budget → flagged, ranked last
+    cloud = next(c for c in rep.ranking("10mbit")
+                 if c.placement == "cloud")
+    assert not cloud.feasible
+    assert rep.ranking("10mbit")[-1] is cloud
+    # budget filtering never *drops* cells: full grid still reported
+    assert len(rep.ranking("10mbit")) == 3
+
+
+def test_advisor_infeasible_budget_is_ranked_but_flagged():
+    """An impossible budget must not return an empty recommendation: the
+    full ranking survives, every cell flagged infeasible, and ``best``
+    still names the least-bad placement."""
+    rep = PlacementAdvisor(n_messages=16).advise(
+        "kmeans", latency_budget=1e-9, wan_budget=1e-9)
+    assert rep.cells and all(not c.feasible for c in rep.cells)
+    assert rep.feasible_cells() == []
+    best = rep.best("10mbit")
+    assert best.placement == "edge"           # still the right direction
+    assert not best.feasible                  # …but honestly flagged
+    rows = rep.rows()
+    assert len(rows) == 9
+    assert all(r["feasible"] is False for r in rows)
+    assert sum(r["recommended"] for r in rows) == 3   # one per band
+    assert "[over budget]" in rep.table()
+
+
+def test_advisor_wan_budget_prefers_thin_placements():
+    """A WAN budget under the cloud cell's raw-point bytes forces the
+    recommendation onto edge/hybrid even on the fast band, where cloud
+    would otherwise be throughput-competitive."""
+    rep = PlacementAdvisor(n_messages=16).advise("kmeans", wan_budget=5.0)
+    for band in ("10mbit", "50mbit", "100mbit"):
+        best = rep.best(band)
+        assert best.placement in ("edge", "hybrid")
+        assert best.feasible
+        cloud = next(c for c in rep.ranking(band)
+                     if c.placement == "cloud")
+        assert not cloud.feasible             # ~20 MB of raw points
+
+
+def test_advisor_sweeps_hybrid_reduce_per_band():
+    """``hybrid_reduce=`` sweeps the edge pre-aggregation factor the same
+    way placements are swept: one hybrid cell per factor per band, more
+    aggressive reduction → fewer WAN bytes, monotonically."""
+    rep = PlacementAdvisor(n_messages=16).advise(
+        "kmeans", hybrid_reduce=(5, 10, 20))
+    for band in ("10mbit", "50mbit", "100mbit"):
+        hybrids = [c for c in rep.ranking(band)
+                   if c.placement == "hybrid"]
+        assert sorted(c.hybrid_reduce for c in hybrids) == [5, 10, 20]
+        by_red = {c.hybrid_reduce: c for c in hybrids}
+        assert (by_red[20].wan_bytes < by_red[10].wan_bytes
+                < by_red[5].wan_bytes)
+        # non-hybrid cells don't carry a reduce factor
+        assert all(c.hybrid_reduce is None for c in rep.ranking(band)
+                   if c.placement != "hybrid")
+    # rows stay schema-shaped and deterministic under the sweep
+    again = PlacementAdvisor(n_messages=16).advise(
+        "kmeans", hybrid_reduce=(5, 10, 20))
+    assert rep.rows() == again.rows()
+
+
+def test_pipeline_run_threads_budget_knobs_to_advisor():
+    """``pipe.run(placement='advise', latency_budget=..., ...)`` reaches
+    the advisor; the knobs are rejected for normal execution runs."""
+    from repro.core import EdgeToCloudPipeline
+    mgr = PilotManager(devices=())
+    edge = mgr.submit_pilot(ComputeResource(tier="edge", n_workers=4))
+    cloud = mgr.submit_pilot(ComputeResource(tier="cloud", n_workers=4))
+    pipe = EdgeToCloudPipeline(
+        pilot_cloud_processing=cloud, pilot_edge=edge,
+        produce_function_handler=lambda ctx: None,
+        process_cloud_function_handler=lambda ctx, data=None: None,
+        function_context={"model": "kmeans", "n_points": 2_500})
+    rep = pipe.run(n_messages=16, placement="advise", latency_budget=2.0,
+                   hybrid_reduce=[5, 10])
+    assert rep.latency_budget == 2.0
+    assert {c.hybrid_reduce for c in rep.cells
+            if c.placement == "hybrid"} == {5, 10}
+    with pytest.raises(ValueError, match="advise"):
+        pipe.run(n_messages=4, wan_budget=1.0)
+
+
 def test_advisor_sweeps_a_custom_profile_band_table():
     """A custom ContinuumProfile's WAN bands drive both the default band
     sweep and the emulated transfer (not just compute re-pricing)."""
@@ -427,3 +544,65 @@ def test_threaded_paced_throughput_matches_sim_prediction():
     # (never speeds it past the prediction), and even a loaded CI runner
     # stays within ~3x at these stage costs
     assert 0.3 < live / predicted < 1.3
+
+
+@pytest.mark.slow
+def test_threaded_and_sim_speculation_agree_on_who_wins():
+    """Speculation parity (extends the threaded-vs-sim pattern above):
+    the same calibrated workload with the same noisy service model must
+    show the same who-wins direction under
+    ``ThreadedExecutor(speculative_factor=...)`` (inline
+    first-completion-wins races on real threads) and ``SimExecutor``
+    (event-scheduled backup races).  At the calibrated k-means sigma,
+    stragglers barely overshoot the threshold, so the primary wins
+    almost every race: losses strictly dominate wins in both worlds
+    (exact counts differ — thread interleaving reorders the rng draws)."""
+    from repro.core import (EdgeToCloudPipeline, MetricsRegistry, SimClock,
+                            SimExecutor, ThreadedExecutor)
+
+    def build(clock=None):
+        metrics = MetricsRegistry(clock=clock) if clock else None
+        mgr = PilotManager(devices=(), clock=clock)
+        edge = mgr.submit_pilot(ComputeResource(tier="edge", n_workers=2))
+        cloud = mgr.submit_pilot(ComputeResource(tier="cloud",
+                                                 n_workers=2))
+        payload = np.arange(64, dtype=np.float64)
+        return EdgeToCloudPipeline(
+            pilot_cloud_processing=cloud, pilot_edge=edge,
+            produce_function_handler=lambda ctx: payload,
+            process_cloud_function_handler=lambda ctx, data=None: 0.0,
+            n_edge_devices=2, cloud_consumers=2,
+            metrics=metrics, clock=clock)
+
+    def make_service():
+        # scaled-down calibrated shape: cloud-heavy stage costs with the
+        # calibrated k-means noise
+        return CostModel().service_model(
+            {"produce": 0.005, "process_cloud": 0.02},
+            sigma=KMEANS.sigma, seed=11)
+
+    factor, n = 1.1, 48
+
+    clock = SimClock()
+    sim_res = build(clock).run(
+        n_messages=n, timeout_s=600.0,
+        scheduler=SimExecutor(clock=clock, service_model=make_service(),
+                              speculative_factor=factor))
+    assert sim_res.n_processed == n
+    sim_m = sim_res.metrics
+
+    threaded_res = build().run(
+        n_messages=n, timeout_s=120.0,
+        scheduler=ThreadedExecutor(service_model=make_service(),
+                                   speculative_factor=factor))
+    assert threaded_res.n_processed == n
+    thr_m = threaded_res.metrics
+
+    for m in (sim_m, thr_m):
+        launches = m.counter("runtime.speculative_launches")
+        wins = m.counter("runtime.speculative_wins")
+        losses = m.counter("runtime.speculative_losses")
+        cancelled = m.counter("runtime.speculative_cancelled")
+        assert launches > 0                    # stragglers actually raced
+        assert wins + losses + cancelled == launches
+        assert losses > wins                   # the shared direction

@@ -1,0 +1,245 @@
+"""DES straggler speculation: SimExecutor mirrors
+``TaskRuntime.speculative_factor`` under virtual time — a Service charge
+running past ``factor × trailing median`` spawns a backup draw racing the
+primary as scheduled events, first completion wins, with explicit
+win/loss/cancel accounting that is bit-identical across runs."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (ComputeResource, EdgeToCloudPipeline,
+                        MetricsRegistry, PilotManager, SimClock,
+                        SimExecutor)
+from repro.core.executor import SpeculationStats
+from repro.cost import CostModel
+from repro.sim.scenarios import (KMEANS, Scenario, run_scenario)
+
+HEAVY = dataclasses.replace(KMEANS, sigma=0.8)   # heavy tail: backups win
+
+
+def _spec_scenario(factor, *, sigma=KMEANS.sigma, model=KMEANS,
+                   n_messages=48, seed=0):
+    return Scenario(model=model, placement="cloud", wan_band="100mbit",
+                    n_messages=n_messages, seed=seed, service_sigma=sigma,
+                    speculative_factor=factor)
+
+
+# ---------------------------------------------------------------------------
+# determinism goldens: seeded noise → bit-identical accounting ×3
+# ---------------------------------------------------------------------------
+
+def test_speculation_accounting_bit_identical_across_three_runs():
+    rows = [run_scenario(_spec_scenario(1.2)).row() for _ in range(3)]
+    assert rows[0] == rows[1] == rows[2]
+    r = rows[0]
+    assert r["spec_launches"] > 0             # stragglers actually raced
+    assert (r["spec_wins"] + r["spec_losses"] + r["spec_cancelled"]
+            == r["spec_launches"])            # every race resolves
+    assert r["processed"] == 48               # speculation loses no data
+
+
+def test_speculation_win_loss_golden_counts():
+    """Numeric pins (pure virtual-time arithmetic — machine-independent):
+    the calibrated k-means sigma at factor 1.2, and the heavy-tailed
+    variant where backups genuinely win races."""
+    r = run_scenario(_spec_scenario(1.2))
+    assert (r.spec_launches, r.spec_wins, r.spec_losses) == (25, 0, 25)
+    h = run_scenario(_spec_scenario(1.2, sigma=None, model=HEAVY,
+                                    n_messages=64))
+    assert h.spec_launches > 0 and h.spec_wins > 0 and h.spec_losses > 0
+    assert (h.spec_launches, h.spec_wins, h.spec_losses) == (51, 23, 28)
+
+
+def test_no_noise_means_no_speculation():
+    """Regression pin: with sigma=0 every charge equals the median, so no
+    charge ever outlives ``factor × median`` (factor ≥ 1) — zero backup
+    launches, and the run is identical to speculation-off."""
+    quiet = run_scenario(_spec_scenario(1.5, sigma=0.0))
+    assert quiet.spec_launches == 0
+    assert quiet.spec_wins == quiet.spec_losses == 0
+    off = run_scenario(_spec_scenario(0.0, sigma=0.0))
+    assert quiet.row() == off.row()
+
+
+def test_lower_factor_speculates_at_least_as_much():
+    """Monotonicity: a lower speculative_factor fires the straggler check
+    earlier, so it can only launch ≥ as many backups."""
+    launches = [run_scenario(_spec_scenario(f)).spec_launches
+                for f in (1.05, 1.2, 1.5, 2.0, 1e9)]
+    assert launches == sorted(launches, reverse=True)
+    assert launches[0] > 0                    # the aggressive end fires
+    assert launches[-1] == 0                  # the inert end never does
+
+
+def test_factor_zero_and_missing_service_model_disable_speculation():
+    r = run_scenario(_spec_scenario(0.0))
+    assert r.spec_launches == 0
+    # and the executor never builds a tracker without a service model
+    clock = SimClock()
+    mgr = PilotManager(devices=(), clock=clock)
+    edge = mgr.submit_pilot(ComputeResource(tier="edge", n_workers=2))
+    cloud = mgr.submit_pilot(ComputeResource(tier="cloud", n_workers=2))
+    pipe = EdgeToCloudPipeline(
+        pilot_cloud_processing=cloud, pilot_edge=edge,
+        produce_function_handler=lambda ctx: np.zeros(8),
+        process_cloud_function_handler=lambda ctx, data=None: None,
+        n_edge_devices=2, metrics=MetricsRegistry(clock=clock),
+        clock=clock, speculative_factor=1.2)
+    ex = SimExecutor(clock=clock)             # no service model
+    res = pipe.run(n_messages=8, timeout_s=60.0, scheduler=ex)
+    assert res.n_processed == 8
+    assert ex.speculation is None
+    assert res.metrics.counter("runtime.speculative_launches") == 0
+
+
+def test_executor_factor_overrides_pipeline_factor():
+    """SimExecutor(speculative_factor=...) wins over the pipeline's knob
+    (same precedence as every other executor-level override)."""
+    clock = SimClock()
+    mgr = PilotManager(devices=(), clock=clock)
+    edge = mgr.submit_pilot(ComputeResource(tier="edge", n_workers=2))
+    cloud = mgr.submit_pilot(ComputeResource(tier="cloud", n_workers=2))
+    pipe = EdgeToCloudPipeline(
+        pilot_cloud_processing=cloud, pilot_edge=edge,
+        produce_function_handler=lambda ctx: np.zeros(8),
+        process_cloud_function_handler=lambda ctx, data=None: None,
+        n_edge_devices=2, metrics=MetricsRegistry(clock=clock),
+        clock=clock, speculative_factor=0.0)
+    service = CostModel().service_model(
+        {"produce": 0.01, "process_cloud": 0.2}, sigma=0.6, seed=7)
+    ex = SimExecutor(clock=clock, service_model=service,
+                     speculative_factor=1.1)
+    res = pipe.run(n_messages=24, timeout_s=600.0, scheduler=ex)
+    assert res.n_processed == 24
+    assert res.metrics.counter("runtime.speculative_launches") > 0
+
+
+def test_speculation_shortens_heavy_tail_makespan():
+    """The point of backup tasks: on the *compute-bound* autoencoder
+    under heavy-tailed service noise, first-completion-wins cuts the
+    straggler tail — virtual makespan with speculation < without, at
+    every seed (k-means cloud cells are WAN-bound: sub-millisecond
+    compute charges give speculation nothing to win)."""
+    from repro.sim.scenarios import AUTOENCODER
+    heavy_ae = dataclasses.replace(AUTOENCODER, sigma=0.8)
+    for seed in range(3):
+        kw = dict(model=heavy_ae, placement="cloud", wan_band="100mbit",
+                  n_messages=32, n_devices=2, n_consumers=2,
+                  service_sigma=None, seed=seed)
+        slow = run_scenario(Scenario(**kw))
+        fast = run_scenario(Scenario(**kw, speculative_factor=1.3))
+        assert fast.spec_wins > 0
+        assert fast.makespan_s < slow.makespan_s
+
+
+def test_speculation_deterministic_under_silent_loss_injection():
+    """Crash injection and speculation compose: the run stays
+    bit-deterministic, loses nothing, and the accounting identity
+    holds."""
+    from repro.sim.scenarios import FailureSpec
+    sc = Scenario(model=HEAVY, placement="cloud", wan_band="100mbit",
+                  n_messages=32, n_devices=2, n_consumers=2,
+                  service_sigma=None, speculative_factor=1.05,
+                  failures=(FailureSpec(at_s=1.0, consumer_idx=0,
+                                        restart_after_s=1.0,
+                                        kind="silent"),))
+    a, b = run_scenario(sc), run_scenario(sc)
+    assert a.row() == b.row()                 # deterministic under injection
+    assert a.n_processed == 32                # nothing lost
+    assert a.spec_launches > 0
+    assert (a.spec_wins + a.spec_losses + a.spec_cancelled
+            == a.spec_launches)
+
+
+def test_speculation_race_unresolved_at_run_end_counts_cancelled():
+    """A backup race still in flight when the run ends resolves as
+    *cancelled* — never a phantom win/loss, so the accounting identity
+    survives truncated runs."""
+    clock = SimClock()
+    mgr = PilotManager(devices=(), clock=clock)
+    edge = mgr.submit_pilot(ComputeResource(tier="edge", n_workers=1))
+    cloud = mgr.submit_pilot(ComputeResource(tier="cloud", n_workers=1))
+    pipe = EdgeToCloudPipeline(
+        pilot_cloud_processing=cloud, pilot_edge=edge,
+        produce_function_handler=lambda ctx: np.zeros(8),
+        process_cloud_function_handler=lambda ctx, data=None: None,
+        n_edge_devices=1, cloud_consumers=1,
+        metrics=MetricsRegistry(clock=clock), clock=clock,
+        heartbeat_timeout_s=1e9)
+    # three 1 s charges warm the median, then a 100 s straggler whose
+    # backup also draws 100 s: the race cannot resolve before the 10 s
+    # run deadline
+    charges = iter([1.0, 1.0, 1.0] + [100.0] * 10)
+
+    def service(stage, ctx, payload):
+        return next(charges) if stage == "process_cloud" else 0.0
+
+    ex = SimExecutor(clock=clock, service_model=service,
+                     speculative_factor=1.5)
+    res = pipe.run(n_messages=4, timeout_s=10.0, scheduler=ex)
+    assert res.n_processed == 3               # the straggler never lands
+    m = res.metrics
+    assert m.counter("runtime.speculative_launches") == 1
+    assert m.counter("runtime.speculative_cancelled") == 1
+    assert m.counter("runtime.speculative_wins") == 0
+    assert m.counter("runtime.speculative_losses") == 0
+
+
+def test_threaded_explicit_zero_disables_all_speculation():
+    """ThreadedExecutor(speculative_factor=0.0) must fully disable
+    speculation even when the pipeline's own factor is nonzero — both
+    the charge-level race and TaskRuntime's whole-body backups (same
+    override precedence as SimExecutor)."""
+    from repro.core import ThreadedExecutor
+    mgr = PilotManager(devices=())
+    edge = mgr.submit_pilot(ComputeResource(tier="edge", n_workers=2))
+    cloud = mgr.submit_pilot(ComputeResource(tier="cloud", n_workers=2))
+    pipe = EdgeToCloudPipeline(
+        pilot_cloud_processing=cloud, pilot_edge=edge,
+        produce_function_handler=lambda ctx: np.zeros(8),
+        process_cloud_function_handler=lambda ctx, data=None: None,
+        n_edge_devices=2, speculative_factor=1.2)
+    service = CostModel().service_model(
+        {"produce": 0.001, "process_cloud": 0.004}, sigma=0.6, seed=3)
+    ex = ThreadedExecutor(service_model=service, speculative_factor=0.0)
+    res = pipe.run(n_messages=16, timeout_s=60.0, scheduler=ex)
+    assert res.n_processed == 16
+    assert ex.speculation is None
+    assert res.metrics.counter("runtime.speculative_launches") == 0
+
+
+# ---------------------------------------------------------------------------
+# SpeculationStats unit behaviour (shared by both executors)
+# ---------------------------------------------------------------------------
+
+def test_speculation_stats_warmup_and_threshold():
+    stats = SpeculationStats(1.5, MetricsRegistry())
+    assert stats.threshold("s") is None       # no samples yet
+    for d in (1.0, 2.0):
+        stats.record("s", d)
+    assert stats.threshold("s") is None       # < MIN_SAMPLES warmup bar
+    stats.record("s", 3.0)
+    assert stats.threshold("s") == pytest.approx(1.5 * 2.0)
+    stats.record("other", 10.0)               # stages don't cross-pollute
+    assert stats.threshold("other") is None
+
+
+def test_speculation_stats_inline_charge_accounting():
+    """The ThreadedExecutor's inline form: a charge past the threshold
+    races a redraw; the effective charge is the earlier finisher and the
+    win/loss counters land in the metrics."""
+    m = MetricsRegistry()
+    stats = SpeculationStats(1.5, m)
+    for d in (1.0, 1.0, 1.0):
+        stats.record("s", d)                  # median 1.0, threshold 1.5
+    # under threshold: charged as-is, no race
+    assert stats.charge("s", 1.2, lambda: 0.1) == 1.2
+    assert m.counter("runtime.speculative_launches") == 0
+    # straggler, backup wins: threshold + redraw < primary
+    assert stats.charge("s", 5.0, lambda: 0.5) == pytest.approx(2.0)
+    assert m.counter("runtime.speculative_wins") == 1
+    # straggler, backup loses: primary finishes first
+    assert stats.charge("s", 1.6, lambda: 5.0) == pytest.approx(1.6)
+    assert m.counter("runtime.speculative_losses") == 1
+    assert m.counter("runtime.speculative_launches") == 2

@@ -1,8 +1,9 @@
 #!/usr/bin/env python
 """Validate a BENCH_*.json file against its committed schema — stdlib only
 (the CI image has no jsonschema package), supporting the subset the
-benchmarks' schemas use: type / required / properties /
-additionalProperties / enum / minimum / exclusiveMinimum / items.
+benchmarks' schemas use: type (including union lists like
+["integer", "null"]) / required / properties / additionalProperties /
+enum / minimum / exclusiveMinimum / items.
 
 Usage::
 
@@ -19,14 +20,20 @@ _TYPES = {"object": dict, "array": list, "string": str,
           "null": type(None)}
 
 
+def _matches_type(value, t):
+    if not isinstance(value, _TYPES[t]):
+        return False
+    if t in ("integer", "number") and isinstance(value, bool):
+        return False
+    return True
+
+
 def _check(value, schema, path, errors):
     t = schema.get("type")
     if t is not None:
-        py = _TYPES[t]
-        ok = isinstance(value, py)
-        if ok and t in ("integer", "number") and isinstance(value, bool):
-            ok = False
-        if not ok:
+        # JSON Schema allows a union of types, e.g. ["integer", "null"]
+        types = t if isinstance(t, list) else [t]
+        if not any(_matches_type(value, x) for x in types):
             errors.append(f"{path}: expected {t}, got "
                           f"{type(value).__name__} ({value!r})")
             return
