@@ -1,7 +1,9 @@
 """DES-backed placement-advisor sweep: for each calibrated workload the
 :class:`~repro.cost.advisor.PlacementAdvisor` emulates the *real*
-``EdgeToCloudPipeline`` under ``SimExecutor`` across
-{edge, cloud, hybrid} × {10/50/100 Mbit/s WAN} — each cell with the
+pipeline under ``SimExecutor`` across
+{edge, cloud, hybrid, fog} × {10/50/100 Mbit/s WAN} — the fog cells run
+a genuine 3-stage edge→fog→cloud ``ContinuumPipeline`` and every row
+carries its per-stage tier vector — each cell with the
 workload's calibrated lognormal service noise — and ranks the placements
 multi-objectively (throughput + p50/p95/p99 latency tail + WAN bytes,
 optionally under ``--latency-budget`` / ``--wan-budget`` constraints and

@@ -1,5 +1,7 @@
-"""Emulated Fig-3 sweep: {k-means, autoencoder} × {edge, cloud, hybrid}
-× {10/50/100 Mbit/s WAN} in virtual time — on the *real* pipeline.
+"""Emulated Fig-3 sweep: {k-means, autoencoder} × {edge, cloud, hybrid,
+fog} × {10/50/100 Mbit/s WAN} in virtual time — on the *real* pipeline
+(fog cells run the genuine 3-stage edge→fog→cloud ``ContinuumPipeline``;
+every row carries its per-stage tier vector).
 
 Each cell runs a genuine ``EdgeToCloudPipeline`` under
 ``run(scheduler=SimExecutor(...))`` (no harness replica): broker offsets,

@@ -5,7 +5,9 @@ Public API (Listing 1 & 2 of the paper):
 
 * :class:`PilotManager` / :class:`ComputeResource` / :class:`Pilot` —
   resource acquisition (step 1),
-* :class:`EdgeToCloudPipeline` — FaaS application instantiation (step 2),
+* :class:`ContinuumPipeline` / :class:`StageSpec` — N-stage FaaS dataflow
+  along the continuum; :class:`EdgeToCloudPipeline` — the paper's
+  Listing-2 two-stage wrapper (step 2),
 * :class:`Broker` / :class:`WanShaper` — pilot-managed brokering,
 * :class:`ParameterService` — cross-continuum model sharing,
 * :class:`PlacementEngine` / :class:`TaskProfile` — placement trade-offs,
@@ -17,7 +19,8 @@ from repro.core.broker import Broker, ConsumerGroup, Message, Topic, WanShaper
 from repro.core.elastic import AutoScaler, ScalePolicy, remesh_restart
 from repro.core.executor import (Poll, Service, SimExecutor, Sleep,
                                  ThreadedExecutor)
-from repro.core.faas import EdgeToCloudPipeline, PipelineResult
+from repro.core.faas import (ContinuumPipeline, EdgeToCloudPipeline,
+                             PipelineResult, StageSpec)
 from repro.core.monitoring import MetricsRegistry
 from repro.core.params_service import ParameterService
 from repro.core.pilot import (ComputeResource, Pilot, PilotError,
@@ -32,7 +35,8 @@ __all__ = [
     "ThreadedExecutor", "SimExecutor", "Poll", "Service", "Sleep",
     "Broker", "ConsumerGroup", "Message", "Topic", "WanShaper",
     "AutoScaler", "ScalePolicy", "remesh_restart",
-    "EdgeToCloudPipeline", "PipelineResult",
+    "ContinuumPipeline", "StageSpec", "EdgeToCloudPipeline",
+    "PipelineResult",
     "MetricsRegistry", "ParameterService",
     "ComputeResource", "Pilot", "PilotError", "PilotManager",
     "register_backend",

@@ -1,8 +1,9 @@
-"""Execution strategies for :class:`~repro.core.faas.EdgeToCloudPipeline`.
+"""Execution strategies for :class:`~repro.core.faas.ContinuumPipeline`
+(and its two-stage :class:`~repro.core.faas.EdgeToCloudPipeline` wrapper).
 
-The pipeline's task loops (edge producers, cloud consumers) are written
-once, as *cooperative generator bodies* (``faas._producer_body`` /
-``faas._consumer_body``) that yield effects instead of blocking:
+The pipeline's task loops (source devices, per-stage consumers) are
+written once, as *cooperative generator bodies* (``faas._source_body`` /
+``faas._stage_body``) that yield effects instead of blocking:
 
 * :class:`Sleep`   — wait a number of seconds,
 * :class:`Service` — charge a stage's service time (priced by the
@@ -37,7 +38,13 @@ Both strategies speculate on stragglers at service-charge granularity
 (``speculative_factor``, mirroring :class:`TaskRuntime`'s knob): a charge
 running past ``factor × trailing median`` races a backup draw of the
 service model, first completion wins, with deterministic win/loss/cancel
-accounting (see :class:`SpeculationStats`).
+accounting (see :class:`SpeculationStats`).  Speculation is
+**capacity-aware** (Dask-style work stealing): a backup occupies a
+*different, idle* consumer slot of the same stage — under the DES the
+first parked stage-mate is stolen for the duration of the race (it is
+not woken for new messages until the race resolves); when no stage-mate
+is idle the backup is not launched at all
+(``runtime.speculative_no_capacity`` counts those skips).
 """
 from __future__ import annotations
 
@@ -112,21 +119,39 @@ class SpeculationStats:
     def cancelled(self) -> None:
         self.metrics.incr("runtime.speculative_cancelled")
 
+    def no_capacity(self) -> None:
+        """A straggler qualified for a backup but no idle slot of its
+        stage existed to steal — the backup was not launched."""
+        self.metrics.incr("runtime.speculative_no_capacity")
+
     # -- inline form (ThreadedExecutor) -----------------------------------
 
     def charge(self, stage: str, primary_s: float,
-               redraw: Callable[[], float]) -> float:
+               redraw: Callable[[], float], *,
+               try_steal: Optional[Callable[[], bool]] = None) -> float:
         """First-completion-wins arithmetic for a blocking strategy: a
         charge that would run past the threshold launches a backup
         (``redraw`` — a fresh draw of the same service model) at the
         threshold, and the effective charge is whichever finishes first.
         Threads can't race two sleeps for one generator step, so the race
         is resolved inline — same accounting, same clock outcome as the
-        DES's event-scheduled race."""
+        DES's event-scheduled race.
+
+        Capacity awareness: when ``try_steal`` is given, the backup only
+        launches if it returns True (an idle slot of this stage was
+        claimed).  The claim is *kept* — the caller releases it after
+        sleeping the effective charge, so the slot stays occupied for
+        the race's duration like the DES helper.  Without the hook
+        capacity is unconstrained (the pre-work-stealing behaviour, kept
+        for unit use)."""
         if primary_s <= 0.0:
             return primary_s
         th = self.threshold(stage)
         if th is None or primary_s <= th:
+            self.record(stage, primary_s)
+            return primary_s
+        if try_steal is not None and not try_steal():
+            self.no_capacity()
             self.record(stage, primary_s)
             return primary_s
         self.launched()
@@ -164,11 +189,15 @@ class Poll:
     returns let the body re-check stop/idle conditions). Sim: the actor
     parks until an append notification, the message's WAN ``ready_at``, a
     stop, or ``wake_at`` (the body's idle deadline) — no idle ticking.
+
+    ``stage`` names the polling stage so the threaded strategy can keep
+    its per-stage idle-slot ledger (capacity-aware speculation).
     """
     group: Any
     consumer_id: str
     timeout_s: float = 0.2
     wake_at: Optional[float] = None
+    stage: Optional[str] = None
 
 
 # ---------------------------------------------------------------------------
@@ -231,6 +260,19 @@ class ThreadedExecutor:
             self.speculation = SpeculationStats(factor, pipe.metrics)
             runtime_kw["speculative_factor"] = 0.0
 
+        def _try_steal(stage: str) -> bool:
+            """Claim an idle slot of ``stage`` for a backup (work
+            stealing): only consumers currently parked in a poll count."""
+            with state.lock:
+                if state.idle.get(stage, 0) > 0:
+                    state.idle[stage] -= 1
+                    return True
+            return False
+
+        def _release_slot(stage: str) -> None:
+            with state.lock:
+                state.idle[stage] = state.idle.get(stage, 0) + 1
+
         def interpret(ctx: TaskContext, eff: Any) -> Any:
             if isinstance(eff, Sleep):
                 clock.sleep(max(eff.seconds, 0.0))
@@ -238,30 +280,57 @@ class ThreadedExecutor:
             if isinstance(eff, Service):
                 s = (self.service_model(eff.stage, ctx, eff.payload)
                      if self.service_model else 0.0)
+                stole = False
                 if self.speculation is not None and s > 0:
+                    def steal():
+                        nonlocal stole
+                        stole = _try_steal(eff.stage)
+                        return stole
+                    # the claim is held for the duration of the
+                    # effective charge (released below, after the
+                    # sleep), mirroring the DES's helper occupancy —
+                    # overlapping stragglers cannot all steal one slot
                     s = self.speculation.charge(
                         eff.stage, s,
                         lambda: self.service_model(eff.stage, ctx,
-                                                   eff.payload))
-                if s > 0:
-                    clock.sleep(s)
+                                                   eff.payload),
+                        try_steal=steal)
+                try:
+                    if s > 0:
+                        clock.sleep(s)
+                finally:
+                    if stole:
+                        _release_slot(eff.stage)
                 return None
             if isinstance(eff, Poll):
-                return eff.group.poll(eff.consumer_id,
-                                      timeout_s=eff.timeout_s)
+                # idle-slot ledger: a consumer blocked in a poll is a
+                # steal target for capacity-aware speculation
+                if eff.stage is not None:
+                    with state.lock:
+                        state.idle[eff.stage] = \
+                            state.idle.get(eff.stage, 0) + 1
+                try:
+                    return eff.group.poll(eff.consumer_id,
+                                          timeout_s=eff.timeout_s)
+                finally:
+                    if eff.stage is not None:
+                        with state.lock:
+                            state.idle[eff.stage] -= 1
             raise TypeError(f"unknown pipeline effect {eff!r}")
 
-        edge_rt = TaskRuntime(pipe.pilot_edge, pipe.metrics,
-                              interpreter=interpret, **runtime_kw)
-        cloud_rt = TaskRuntime(pipe.pilot_cloud, pipe.metrics,
-                               interpreter=interpret, **runtime_kw)
+        runtimes = [TaskRuntime(stage.pilot, pipe.metrics,
+                                interpreter=interpret, **runtime_kw)
+                    for stage in pipe.stages]
         producer_futs = [
-            edge_rt.submit(pipe._producer_body, state, i,
-                           state.per_device[i])
-            for i in range(pipe.n_edge_devices)]
-        consumer_futs = [
-            cloud_rt.submit(pipe._consumer_body, state, f"consumer-{i}")
-            for i in range(pipe.cloud_consumers)]
+            runtimes[0].submit(pipe._source_body, state, i,
+                               state.per_device[i])
+            for i in range(pipe.stage_tasks(0))]
+        consumer_futs = []
+        for si in range(1, len(pipe.stages)):
+            consumer_futs.extend(
+                runtimes[si].submit(pipe._stage_body, state, si,
+                                    pipe.stage_cid(si, i))
+                for i in range(pipe.stage_tasks(si)))
 
         # the semaphore wait is real (worker threads are real) but the
         # deadline is measured on the injected clock; with a virtual clock
@@ -295,8 +364,8 @@ class ThreadedExecutor:
                     continue
                 except Exception:  # noqa: BLE001 — task errors already counted
                     break
-        edge_rt.shutdown(wait=False)
-        cloud_rt.shutdown(wait=False)
+        for rt in runtimes:
+            rt.shutdown(wait=False)
         return pipe._finish(state, wall)
 
 
@@ -323,14 +392,15 @@ class _PollWait:
 class _ServiceOp:
     """One in-flight Service charge racing an (eventual) speculative
     backup.  ``primary_ev`` fires at the primary draw's completion;
-    ``check_ev`` fires at ``factor × trailing median`` and launches the
-    backup if the primary hasn't finished; ``backup_ev`` fires at the
-    backup's completion.  Whichever completion event fires first resolves
-    the op, cancels the loser, and resumes the actor."""
+    ``check_ev`` fires at ``factor × trailing median`` and — if an idle
+    stage-mate's slot can be stolen — launches the backup on that slot;
+    ``backup_ev`` fires at the backup's completion.  Whichever completion
+    event fires first resolves the op, cancels the loser, releases the
+    stolen slot, and resumes the actor."""
 
     __slots__ = ("rec", "actor", "stage", "ctx", "payload", "t0",
                  "primary_ev", "check_ev", "backup_ev", "backup_launched",
-                 "resolved")
+                 "resolved", "helper", "helper_eff")
 
     def __init__(self, rec: dict, actor, stage: str, payload: Any,
                  t0: float):
@@ -344,6 +414,8 @@ class _ServiceOp:
         self.backup_ev = None
         self.backup_launched = False
         self.resolved = False
+        self.helper = None         # the stage-mate whose slot the backup runs on
+        self.helper_eff = None     # its interrupted Poll, re-attempted on release
 
     def cancel_events(self) -> None:
         for ev in (self.primary_ev, self.check_ev, self.backup_ev):
@@ -383,8 +455,12 @@ class SimExecutor:
         Service charge still running past ``factor × trailing median``
         of its stage's completed charges spawns a backup — a fresh draw
         of the service model racing the primary as scheduled events,
-        first completion wins (see :class:`SpeculationStats`).  Win /
-        loss / cancel counts land in the run metrics and stay
+        first completion wins (see :class:`SpeculationStats`).  The
+        backup is capacity-aware work stealing: it occupies the first
+        *idle* (parked) stage-mate's slot, which stops taking new
+        messages until the race resolves — and when no stage-mate is
+        idle the backup is skipped (``runtime.speculative_no_capacity``).
+        Win / loss / cancel counts land in the run metrics and stay
         bit-identical across repeats.
     """
 
@@ -440,7 +516,8 @@ class _SimRun:
         self.tasks: Dict[str, dict] = {}
         self.consumer_recs: List[dict] = []       # spawn order (autoscale)
         self._task_seq = itertools.count()
-        self._consumer_seq = itertools.count(pipe.cloud_consumers)
+        self._consumer_seq = itertools.count(pipe.stage_tasks(-1))
+        self._subs: List = []                     # per-topic callbacks
         self.shared: dict = {}
         factor = (ex.speculative_factor if ex.speculative_factor is not None
                   else pipe._runtime_kw["speculative_factor"])
@@ -454,15 +531,21 @@ class _SimRun:
     def execute(self):
         pipe, state = self.pipe, self.state
         t0 = self.clock.now()
-        state.topic.subscribe(self._on_append)
+        for topic in state.topics:
+            cb = (lambda partition, ready_at, topic=topic:
+                  self._on_append(topic, partition, ready_at))
+            self._subs.append((topic, cb))
+            topic.subscribe(cb)
         offs = self.ex.producer_offsets
         for i, count in enumerate(state.per_device):
             off = offs[i] if i < len(offs) else 0.0
-            self._spawn("producer", None, at=t0 + max(off, 0.0),
+            self._spawn("producer", None, stage=0,
+                        at=t0 + max(off, 0.0),
                         body=lambda ctx, i=i, c=count:
-                        pipe._producer_body(ctx, state, i, c))
-        for i in range(pipe.cloud_consumers):
-            self._spawn_consumer(f"consumer-{i}", at=t0)
+                        pipe._source_body(ctx, state, i, c))
+        for si in range(1, len(pipe.stages)):
+            for i in range(pipe.stage_tasks(si)):
+                self._spawn_consumer(pipe.stage_cid(si, i), si, at=t0)
         for f in self.ex.crash_plan:
             self.sched.at(t0 + float(f.at_s), lambda f=f: self._inject(f))
         if self.ex.autoscaler is not None:
@@ -479,7 +562,8 @@ class _SimRun:
         if state.t_done is None:
             state.t_done = min(self.clock.now(), deadline)
         state.stop.set()
-        state.topic.unsubscribe(self._on_append)
+        for topic, cb in self._subs:
+            topic.unsubscribe(cb)
         # unresolved speculation races at run end: the loser was never
         # decided — account the launched backups as cancelled so
         # wins + losses + cancelled always equals launches
@@ -489,15 +573,18 @@ class _SimRun:
 
     # -- task spawning -----------------------------------------------------
 
-    def _spawn(self, kind: str, cid: Optional[str], *, body,
+    def _spawn(self, kind: str, cid: Optional[str], *, stage: int, body,
                at: Optional[float] = None) -> dict:
-        pilot = (self.pipe.pilot_edge if kind == "producer"
-                 else self.pipe.pilot_cloud)
+        pilot = self.pipe.stages[stage].pilot
         pilot.require_active()
         rec = {"task_id": f"{pilot.pilot_id}-sim-{next(self._task_seq)}",
-               "kind": kind, "cid": cid, "make_body": body, "pilot": pilot,
+               "kind": kind, "cid": cid, "stage": stage,
+               "make_body": body, "pilot": pilot,
+               "group": (self.state.groups[stage - 1]
+                         if kind == "consumer" else None),
                "attempt": 0, "retries_left": self.max_retries,
                "actor": None, "ctx": None, "wait": None, "svc": None,
+               "helping": None,
                "last_beat": self.clock.now(), "exit_reason": None}
         self.tasks[rec["task_id"]] = rec
         if kind == "consumer":
@@ -506,12 +593,13 @@ class _SimRun:
         self._launch(rec, at=at)
         return rec
 
-    def _spawn_consumer(self, cid: str,
+    def _spawn_consumer(self, cid: str, stage: int,
                         at: Optional[float] = None) -> dict:
         pipe, state = self.pipe, self.state
         return self._spawn(
-            "consumer", cid, at=at,
-            body=lambda ctx, cid=cid: pipe._consumer_body(ctx, state, cid))
+            "consumer", cid, stage=stage, at=at,
+            body=lambda ctx, cid=cid, stage=stage:
+            pipe._stage_body(ctx, state, stage, cid))
 
     def _launch(self, rec: dict, at: Optional[float] = None) -> None:
         if self.state.stop.is_set() or rec["task_id"] not in self.tasks:
@@ -603,14 +691,17 @@ class _SimRun:
             return
         self._attempt_poll(wait.rec, wait.actor, wait.eff)
 
-    def _on_append(self, partition: int, ready_at: float) -> None:
+    def _on_append(self, topic, partition: int, ready_at: float) -> None:
         now = self.clock.now()
         for rec in list(self.tasks.values()):
             wait = rec["wait"]
             if wait is None or wait.resolved:
                 continue
-            # only wake waiters actually assigned this partition (a
-            # membership change re-checks everyone via _wake_all_parked)
+            # only wake waiters of this hop's topic actually assigned this
+            # partition (a membership change re-checks everyone via
+            # _wake_all_parked)
+            if wait.eff.group.topic is not topic:
+                continue
             if partition not in wait.eff.group.partitions_for(
                     wait.eff.consumer_id):
                 continue
@@ -645,13 +736,41 @@ class _SimRun:
             op.check_ev = self.sched.after(
                 th, lambda: self._svc_speculate(op))
 
+    def _idle_helper(self, rec: dict) -> Optional[dict]:
+        """The first stage-mate (spawn order — deterministic) currently
+        parked in a poll whose slot a backup can steal."""
+        for r in self.consumer_recs:
+            if r is rec or r["stage"] != rec["stage"]:
+                continue
+            if r["task_id"] not in self.tasks or r["helping"] is not None:
+                continue
+            wait = r["wait"]
+            if (wait is not None and not wait.resolved
+                    and r["actor"] is not None and r["actor"].alive):
+                return r
+        return None
+
     def _svc_speculate(self, op: _ServiceOp) -> None:
-        """The primary charge outlived ``factor × median``: launch the
+        """The primary charge outlived ``factor × median``: steal an idle
+        stage-mate's slot (work stealing — the backup occupies a
+        *different* consumer slot, never the straggler's own), launch the
         backup — a fresh draw of the service model — and let the two
-        completion events race."""
+        completion events race.  No idle slot → no backup."""
         op.check_ev = None
         if op.resolved or not op.actor.alive or self.state.stop.is_set():
             return
+        helper = self._idle_helper(op.rec)
+        if helper is None:
+            self.speculation.no_capacity()
+            return
+        # steal the slot: the helper stops listening for new messages
+        # until the race resolves (its suspended Poll is re-attempted on
+        # release)
+        op.helper = helper
+        op.helper_eff = helper["wait"].eff
+        self._clear_wait(helper)
+        helper["helping"] = op
+        self._beat(helper)
         backup_s = max(self.ex.service_model(op.stage, op.rec["ctx"],
                                              op.payload), 0.0)
         op.backup_launched = True
@@ -659,6 +778,38 @@ class _SimRun:
         self._beat(op.rec)                 # the backup is making progress
         op.backup_ev = self.sched.after(
             backup_s, lambda: self._svc_done(op, backup_won=True))
+
+    def _release_helper(self, op: _ServiceOp) -> None:
+        """Hand a stolen slot back: the helper resumes polling (unless
+        the run is over or the helper died meanwhile)."""
+        helper, eff = op.helper, op.helper_eff
+        op.helper = op.helper_eff = None
+        if helper is None:
+            return
+        if helper["helping"] is op:
+            helper["helping"] = None
+        self._beat(helper)
+        if (helper["task_id"] in self.tasks
+                and helper["actor"] is not None and helper["actor"].alive
+                and not self.state.stop.is_set()):
+            self._attempt_poll(helper, helper["actor"], eff)
+
+    def _abort_lend(self, rec: dict) -> None:
+        """A lent-out helper died (crash / silent loss / heartbeat): the
+        slot its backup was running on is gone, so the backup dies with
+        it — accounted as cancelled; the primary keeps running."""
+        op = rec["helping"]
+        if op is None:
+            return
+        rec["helping"] = None
+        if op.resolved or not op.backup_launched:
+            return
+        if op.backup_ev is not None:
+            op.backup_ev.cancel()
+            op.backup_ev = None
+        op.backup_launched = False
+        op.helper = op.helper_eff = None
+        self.speculation.cancelled()
 
     def _svc_done(self, op: _ServiceOp, backup_won: bool) -> None:
         if op.resolved or not op.actor.alive:
@@ -668,13 +819,15 @@ class _SimRun:
         op.rec["svc"] = None
         if op.backup_launched:
             self.speculation.resolved(backup_won)
+        self._release_helper(op)
         self.speculation.record(op.stage, self.clock.now() - op.t0)
         self._beat(op.rec)
         op.actor.resume(None)
 
     def _cancel_service(self, rec: dict) -> None:
         """Abort an in-flight Service race (actor died / run ended): a
-        launched-but-unresolved backup counts as cancelled."""
+        launched-but-unresolved backup counts as cancelled and its stolen
+        slot is handed back."""
         op = rec["svc"]
         if op is None:
             return
@@ -685,6 +838,7 @@ class _SimRun:
         op.cancel_events()
         if op.backup_launched:
             self.speculation.cancelled()
+        self._release_helper(op)
 
     def _clear_wait(self, rec: dict) -> None:
         wait = rec["wait"]
@@ -700,10 +854,11 @@ class _SimRun:
         (its generator is never thrown into, so the body's exception
         handler can't release it). Release it here or the redeliveries of
         that message would be dropped as duplicates forever."""
-        mid = self.state.inflight.pop((rec["cid"], rec["attempt"]), None)
+        mid = self.state.inflight.pop(
+            (rec["stage"], rec["cid"], rec["attempt"]), None)
         if mid is not None:
             with self.state.lock:
-                self.state.seen_ids.discard(mid)
+                self.state.seen[rec["stage"] - 1].discard(mid)
 
     # -- exits / failures / retries ---------------------------------------
 
@@ -711,6 +866,7 @@ class _SimRun:
         rec["actor"] = None
         self._clear_wait(rec)
         self._cancel_service(rec)
+        self._abort_lend(rec)
         if exc is None:
             self.tasks.pop(rec["task_id"], None)
             self.metrics.incr("runtime.completed")
@@ -718,7 +874,7 @@ class _SimRun:
         if isinstance(exc, ActorKilled):
             self.tasks.pop(rec["task_id"], None)
             if rec["kind"] == "consumer":
-                self.state.group.leave(rec["cid"])
+                rec["group"].leave(rec["cid"])
                 self._wake_all_parked()
             if rec["exit_reason"] == "retire":
                 self.metrics.event("consumer_retired", consumer=rec["cid"])
@@ -742,7 +898,7 @@ class _SimRun:
             self.tasks.pop(rec["task_id"], None)
             if rec["kind"] == "consumer":
                 # free the failed member's partitions for the survivors
-                self.state.group.leave(rec["cid"])
+                rec["group"].leave(rec["cid"])
                 self._wake_all_parked()
             self.metrics.event("task_failed", task_id=rec["task_id"])
 
@@ -762,6 +918,7 @@ class _SimRun:
                 rec["actor"].drop()
                 self._clear_wait(rec)
                 self._cancel_service(rec)
+                self._abort_lend(rec)
                 self._release_inflight(rec)
             else:
                 rec["exit_reason"] = "crash"
@@ -775,7 +932,7 @@ class _SimRun:
         if self.state.stop.is_set():
             return
         self.metrics.event("consumer_restarted", consumer=cid)
-        self._spawn_consumer(cid)
+        self._spawn_consumer(cid, len(self.pipe.stages) - 1)
 
     # -- periodic machinery: heartbeats + autoscaler ----------------------
 
@@ -786,16 +943,19 @@ class _SimRun:
         for rec in list(self.tasks.values()):
             if rec["wait"] is not None:        # parked = framework-idle
                 continue
+            if rec["helping"] is not None:     # lent to a backup race —
+                continue                       # framework-busy, not hung
             if rec["actor"] is None:           # between retry launches
                 continue
             if now - rec["last_beat"] > self.heartbeat_timeout_s:
                 rec["actor"].drop()
                 rec["actor"] = None
                 self._cancel_service(rec)
+                self._abort_lend(rec)
                 if rec["kind"] == "consumer":
                     self._release_inflight(rec)
                     # session timeout: rebalance the lost member out
-                    self.state.group.leave(rec["cid"])
+                    rec["group"].leave(rec["cid"])
                     self._wake_all_parked()
                     self.metrics.event("consumer_lost", consumer=rec["cid"])
                 self._task_error(
@@ -804,20 +964,24 @@ class _SimRun:
         self.sched.after(self.ex.monitor_interval_s, self._monitor_tick)
 
     def _alive_consumers(self) -> List[dict]:
+        """Final-stage consumers still alive — the pool the autoscaler
+        grows/shrinks (intermediate stages keep their static pools)."""
+        last = len(self.pipe.stages) - 1
         return [r for r in self.consumer_recs
-                if r["task_id"] in self.tasks]
+                if r["stage"] == last and r["task_id"] in self.tasks]
 
     def _autoscale_tick(self) -> None:
         if self.state.stop.is_set():
             return
         self.ex.autoscaler.step_once()
-        target = self.pipe.pilot_cloud.resource.n_workers
+        last = len(self.pipe.stages) - 1
+        target = self.pipe.stages[last].pilot.resource.n_workers
         alive = self._alive_consumers()
         if target > len(alive):
             for _ in range(target - len(alive)):
                 cid = f"consumer-{next(self._consumer_seq)}"
                 self.metrics.event("consumer_spawned", consumer=cid)
-                self._spawn_consumer(cid)
+                self._spawn_consumer(cid, last)
         elif target < len(alive):
             for rec in alive[target:]:         # retire the newest first
                 if rec["actor"] is not None and rec["actor"].alive:

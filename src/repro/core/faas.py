@@ -1,39 +1,43 @@
-"""FaaS API + EdgeToCloudPipeline (paper §II-C, Listings 1 & 2).
+"""FaaS API: ContinuumPipeline (N tiers) + EdgeToCloudPipeline (paper
+§II-C, Listings 1 & 2).
 
-The application provides up to three plain Python functions::
+The paper's pilot abstraction places tasks *anywhere along the
+edge-to-cloud continuum*, so the pipeline is an N-stage dataflow, not a
+hardwired edge→cloud pair:
 
-    def produce_edge(context) -> data                  # sensing / generation
-    def process_edge(context, data=None) -> data       # pre-aggregation
-    def process_cloud(context, data=None) -> result    # analytics / training
+* :class:`StageSpec` — one stage: a plain Python handler bound to a pilot
+  (or ``placement='auto'`` to let the :class:`PlacementEngine` bind it),
+* :class:`ContinuumPipeline` — N ordered stages connected by broker
+  topics; every hop between consecutive stage tiers rides the continuum
+  topology's *routed* link (multi-hop paths collapse to their
+  serialized-equivalent bandwidth + accumulated latency) and stamps the
+  shared MetricsRegistry,
+* :class:`EdgeToCloudPipeline` — the paper's Listing-2 object, now a thin
+  two-stage wrapper (``produce``[+``process_edge``] → broker →
+  ``process_cloud``) so the historical API and every Fig-3 golden keep
+  working unchanged.
 
-and instantiates::
+A 4-tier device/edge/fog/cloud run is just four StageSpecs::
 
-    EdgeToCloudPipeline(
-        pilot_cloud_processing=..., pilot_cloud_broker=..., pilot_edge=...,
-        produce_function_handler=produce_edge,
-        process_edge_function_handler=process_edge,      # optional
-        process_cloud_function_handler=process_cloud,
-        function_context={...},
-    ).run(n_messages=512)
+    ContinuumPipeline(stages=[
+        StageSpec("sense", sense_fn, pilot=pilot_device),
+        StageSpec("edge_agg", edge_fn, pilot=pilot_edge),
+        StageSpec("fog_agg", fog_fn, pilot=pilot_fog),
+        StageSpec("train", train_fn, pilot=pilot_cloud),
+    ], function_context={...}).run(n_messages=512)
 
-The framework then (step 2 of Fig 1) packages the functions into tasks,
-binds them to pilots (placement), creates the broker topic (one partition
-per edge device, the paper's baseline layout), and manages the dataflow
-edge → [process_edge] → broker → cloud. All hops stamp the shared
-MetricsRegistry; results are collected from the cloud stage.
+Execution strategy: the stage loops are cooperative generator bodies (see
+:mod:`repro.core.executor`) selected by ``run(scheduler=)``:
 
-Execution strategy: the producer/consumer loops are cooperative generator
-bodies (see :mod:`repro.core.executor`) selected by ``run(scheduler=)``:
-
-* ``ThreadedExecutor`` (default) — real threads, today's behaviour;
+* ``ThreadedExecutor`` (default) — real threads;
 * ``SimExecutor`` — the same genuine pipeline as a single-threaded
   discrete-event simulation under an auto-advance
   :class:`~repro.sim.clock.SimClock`, bit-reproducible run to run.
 
-Dynamism (paper §II-D): ``replace_function(stage, fn)`` hot-swaps a stage's
-payload at runtime *without* re-allocating pilots (e.g. exchanging low- vs
-high-fidelity models), and pilots can be resized through the PilotManager
-while the pipeline runs (the AutoScaler drives this inside the DES — see
+Dynamism (paper §II-D): ``replace_function(stage, fn)`` hot-swaps a
+stage's payload at runtime *without* re-allocating pilots, and pilots can
+be resized through the PilotManager while the pipeline runs (the
+AutoScaler drives the final stage's pool inside the DES — see
 ``SimExecutor(autoscaler=...)``).
 """
 from __future__ import annotations
@@ -41,7 +45,7 @@ from __future__ import annotations
 import itertools
 import threading
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence
 
 from repro.core.broker import Broker, ConsumerGroup, Topic, WanShaper
 from repro.core.executor import Poll, Service, ThreadedExecutor
@@ -56,6 +60,27 @@ ProduceFn = Callable[[TaskContext], Any]
 ProcessFn = Callable[..., Any]
 
 _run_ids = itertools.count()
+
+
+@dataclass(frozen=True)
+class StageSpec:
+    """One stage of a :class:`ContinuumPipeline`.
+
+    The source stage's ``handler`` has the produce signature
+    ``f(ctx) -> data``; every later stage processes:
+    ``f(ctx, data=None) -> data`` (the last stage's return value is the
+    collected result).  Bind the stage to a ``pilot`` explicitly, or set
+    ``placement='auto'`` and let the pipeline's
+    :class:`~repro.core.placement.PlacementEngine` pick from the
+    candidates handed to the constructor.  ``n_tasks`` is the stage's
+    parallel task count (source: devices; consuming stages: consumers) —
+    default: the bound pilot's worker count.
+    """
+    name: str
+    handler: ProcessFn
+    pilot: Optional[Pilot] = None
+    placement: str = "explicit"        # explicit | auto
+    n_tasks: Optional[int] = None
 
 
 @dataclass
@@ -79,18 +104,24 @@ class PipelineResult:
 
 @dataclass
 class _RunState:
-    """Per-``run`` shared state between the task bodies and the strategy."""
-    topic: Topic
-    group: ConsumerGroup
+    """Per-``run`` shared state between the task bodies and the strategy.
+    One topic/group/dedup-set per hop (stage ``i`` consumes
+    ``topics[i-1]`` and produces into ``topics[i]``)."""
+    topics: List[Topic]
+    groups: List[ConsumerGroup]
     per_device: List[int]
     n_messages: int
     timeout_s: float
     collect: bool
     results: List[Any] = field(default_factory=list)
-    seen_ids: set = field(default_factory=set)
-    # (cid, attempt) -> msg_id currently holding a dedup reservation, so
-    # the executor can release it if the attempt dies without unwinding
+    seen: List[set] = field(default_factory=list)
+    # (stage_idx, cid, attempt) -> msg_id currently holding a dedup
+    # reservation, so the executor can release it if the attempt dies
+    # without unwinding
     inflight: Dict = field(default_factory=dict)
+    # stage name -> consumers currently parked in a poll (the threaded
+    # strategy's idle-slot ledger for capacity-aware speculation)
+    idle: Dict[str, int] = field(default_factory=dict)
     lock: threading.Lock = field(default_factory=threading.Lock)
     stop: threading.Event = field(default_factory=threading.Event)
     processed_sem: threading.Semaphore = field(
@@ -99,34 +130,52 @@ class _RunState:
     t_done: Optional[float] = None      # clock time the target was reached
 
 
-class EdgeToCloudPipeline:
-    """Listing 2's object. Parameter names follow the paper's API."""
+class ContinuumPipeline:
+    """N ordered stages along the continuum, connected by broker topics.
+
+    Each hop ``stage[i] → stage[i+1]`` gets its own topic; when the two
+    stages sit on different tiers the hop is shaped by a
+    :class:`~repro.core.broker.WanShaper` priced from the continuum
+    topology's *routed* path between the tiers (multi-hop routes collapse
+    to their serialized-equivalent bandwidth and accumulated latency).
+    Pass ``shapers=[...]`` (one entry per hop, ``None`` = unshaped) to
+    override.
+
+    ``placement='auto'`` stages are bound at construction by scoring
+    ``candidate_pilots`` through the placement engine (data flows from
+    the previous stage's tier).
+    """
 
     def __init__(self, *,
-                 pilot_cloud_processing: Pilot,
-                 pilot_edge: Pilot,
-                 pilot_cloud_broker: Optional[Pilot] = None,
-                 produce_function_handler: ProduceFn,
-                 process_cloud_function_handler: ProcessFn,
-                 process_edge_function_handler: Optional[ProcessFn] = None,
+                 stages: Sequence[StageSpec],
                  function_context: Optional[dict] = None,
-                 n_edge_devices: Optional[int] = None,
                  n_partitions: Optional[int] = None,
-                 topic_name: str = "edge-to-cloud",
-                 wan_shaper: Optional[WanShaper] = None,
+                 topic_name: str = "continuum",
+                 shapers: Optional[Sequence[Optional[WanShaper]]] = None,
                  broker: Optional[Broker] = None,
                  parameter_service: Optional[ParameterService] = None,
                  placement: str = "explicit",
                  placement_engine: Optional[PlacementEngine] = None,
-                 cloud_consumers: Optional[int] = None,
+                 candidate_pilots: Optional[Mapping[str, Sequence[Pilot]]]
+                 = None,
                  metrics: Optional[MetricsRegistry] = None,
                  max_retries: int = 2,
                  speculative_factor: float = 0.0,
                  heartbeat_timeout_s: float = 30.0,
                  clock: Optional[Clock] = None):
-        self.pilot_edge = pilot_edge
-        self.pilot_cloud = pilot_cloud_processing
-        self.pilot_broker = pilot_cloud_broker or pilot_cloud_processing
+        if len(stages) < 2:
+            raise ValueError("a pipeline needs a source stage and at "
+                             "least one processing stage")
+        names = [s.name for s in stages]
+        if len(set(names)) != len(names):
+            raise ValueError(f"stage names must be unique, got {names}")
+        if "consumer" in names[:-1]:
+            # the final stage owns the "consumer-{i}" cid namespace that
+            # crash injection, restarts and autoscaling address — an
+            # intermediate stage of that name would collide with it
+            raise ValueError(
+                "'consumer' is reserved for the final stage's task ids; "
+                "rename the intermediate stage")
         # an auto-advance SimClock here means the pipeline is destined for
         # run(scheduler=SimExecutor(...)); ThreadedExecutor re-checks and
         # rejects it at run time (threads can't coordinate on a clock that
@@ -137,30 +186,114 @@ class EdgeToCloudPipeline:
                                        clock=self._clock)
         self.params = parameter_service or ParameterService(
             metrics=self.metrics)
-        self.n_edge_devices = (n_edge_devices
-                               or pilot_edge.resource.n_workers)
-        # paper baseline: one partition per edge device
-        self.n_partitions = n_partitions or self.n_edge_devices
-        self.topic_name = topic_name
-        self.wan_shaper = wan_shaper
         self.context = dict(function_context or {})
-        self._fns: Dict[str, Optional[ProcessFn]] = {
-            "produce": produce_function_handler,
-            "process_edge": process_edge_function_handler,
-            "process_cloud": process_cloud_function_handler,
-        }
-        self._fn_lock = threading.Lock()
         self.placement_engine = placement_engine or PlacementEngine()
         self.placement = placement
-        # keep Kafka:Dask partition ratio constant (paper: "we keep the
-        # ratio of partitions constant between Kafka and Dask")
-        self.cloud_consumers = cloud_consumers or self.n_partitions
+        self.stages: List[StageSpec] = self._resolve_stages(
+            list(stages), candidate_pilots or {})
+        self.topic_name = topic_name
+        # paper baseline: one partition per source device, the ratio kept
+        # constant along every hop
+        self.n_partitions = n_partitions or self.stage_tasks(0)
+        self._fns: Dict[str, Optional[ProcessFn]] = {
+            s.name: s.handler for s in self.stages}
+        self._fn_lock = threading.Lock()
+        if shapers is None:
+            self._shapers = [
+                self._hop_shaper(a.pilot.tier, b.pilot.tier)
+                for a, b in zip(self.stages[:-1], self.stages[1:])]
+        else:
+            if len(shapers) != len(self.stages) - 1:
+                raise ValueError(
+                    f"need one shaper per hop ({len(self.stages) - 1}), "
+                    f"got {len(shapers)}")
+            self._shapers = list(shapers)
         self._runtime_kw = dict(max_retries=max_retries,
                                 speculative_factor=speculative_factor,
                                 heartbeat_timeout_s=heartbeat_timeout_s,
                                 clock=self._clock)
+        self._topics: List[Topic] = []
         self._topic: Optional[Topic] = None
         self._group: Optional[ConsumerGroup] = None
+
+    # -- construction helpers ------------------------------------------------
+
+    def _resolve_stages(self, stages: List[StageSpec],
+                        candidates: Mapping[str, Sequence[Pilot]]
+                        ) -> List[StageSpec]:
+        """Bind ``placement='auto'`` stages to the best candidate pilot
+        (late binding, the paper's placement decision)."""
+        import dataclasses
+        resolved: List[StageSpec] = []
+        for i, st in enumerate(stages):
+            if st.pilot is not None:
+                resolved.append(st)
+                continue
+            if st.placement != "auto":
+                raise ValueError(
+                    f"stage {st.name!r} has no pilot; bind one or set "
+                    f"placement='auto' with candidate_pilots")
+            cands = list(candidates.get(st.name, ()))
+            if not cands:
+                raise ValueError(
+                    f"stage {st.name!r} is placement='auto' but no "
+                    f"candidate_pilots[{st.name!r}] were provided")
+            in_tier = (resolved[i - 1].pilot.tier if i > 0 else "edge")
+            profile = TaskProfile(
+                flops=float(self.context.get("task_flops", 1e9)),
+                input_bytes=float(self.context.get("message_bytes", 1e6)),
+                input_tier=in_tier,
+                preferred_tiers=tuple(
+                    self.context.get("preferred_tiers", ())))
+            pilot = self.placement_engine.place(profile, cands).pilot
+            resolved.append(dataclasses.replace(st, pilot=pilot))
+        return resolved
+
+    def _hop_shaper(self, src_tier: str,
+                    dst_tier: str) -> Optional[WanShaper]:
+        """Shape a hop by the routed link between its tiers (None for
+        intra-tier hops — local traffic is not shaped)."""
+        if src_tier == dst_tier:
+            return None
+        link = self.placement_engine.cost.route(src_tier,
+                                                dst_tier).as_link()
+        return WanShaper(bandwidth_bps=link.bandwidth_bps,
+                         rtt_s=link.latency_s, sleep=False)
+
+    def stage_tasks(self, idx: int) -> int:
+        """Parallel task count of stage ``idx`` (negative ok)."""
+        st = self.stages[idx]
+        return st.n_tasks or st.pilot.resource.n_workers
+
+    def stage_cid(self, idx: int, i: int) -> str:
+        """Consumer id of stage ``idx``'s ``i``-th task — the one naming
+        rule both executors share.  The final stage owns the
+        ``consumer-{i}`` namespace (crash injection, restarts and
+        autoscaling address final-stage members by it); intermediate
+        stages prefix with their own (reserved-checked) name."""
+        if idx % len(self.stages) == len(self.stages) - 1:
+            return f"consumer-{i}"
+        return f"{self.stages[idx].name}-{i}"
+
+    @property
+    def n_source_tasks(self) -> int:
+        return self.stage_tasks(0)
+
+    @property
+    def n_edge_devices(self) -> int:
+        """Legacy alias: the source stage's device count."""
+        return self.stage_tasks(0)
+
+    @property
+    def cloud_consumers(self) -> int:
+        """Legacy alias: the final stage's consumer count."""
+        return self.stage_tasks(-1)
+
+    @property
+    def stage_tiers(self) -> List[str]:
+        """The per-stage execution tier vector (placement advisories and
+        bench rows carry this)."""
+        return [s.pilot.tier for s in self.stages]
 
     # -- dynamism ------------------------------------------------------------
 
@@ -179,58 +312,54 @@ class EdgeToCloudPipeline:
             return self._fns[stage]
 
     def current_lag(self) -> int:
-        """Broker lag of the live run's consumer group — the natural
-        ``lag_fn`` for an :class:`~repro.core.elastic.AutoScaler` watching
-        this pipeline (0 when no run is active)."""
+        """Broker lag of the live run's final consumer group — the
+        natural ``lag_fn`` for an :class:`~repro.core.elastic.AutoScaler`
+        watching this pipeline (0 when no run is active)."""
         g = self._group
         return g.lag() if g is not None else 0
 
-    # -- placement ------------------------------------------------------------
-
-    def _choose_cloud_pilot(self, candidates: List[Pilot]) -> Pilot:
-        if self.placement != "auto" or not candidates:
-            return self.pilot_cloud
-        profile = TaskProfile(
-            flops=float(self.context.get("task_flops", 1e9)),
-            input_bytes=float(self.context.get("message_bytes", 1e6)),
-            input_tier="edge",
-            preferred_tiers=tuple(self.context.get("preferred_tiers", ())))
-        return self.placement_engine.place(profile, candidates).pilot
-
     # -- task bodies (cooperative; interpreted by the strategy) ---------------
 
-    def _producer_body(self, ctx: TaskContext, state: _RunState,
-                       device_idx: int, count: int):
-        """One edge device: generate → [process_edge] → broker, ``count``
-        times. ``Service("produce")`` charges the strategy's per-message
-        generation + edge-stage cost (zero unless a service model is set)."""
-        topic = state.topic
+    def _invoke_source(self, ctx: TaskContext) -> Any:
+        return self._fn(self.stages[0].name)(ctx)
+
+    def _source_body(self, ctx: TaskContext, state: _RunState,
+                     device_idx: int, count: int):
+        """One source device: generate → first topic, ``count`` times.
+        ``Service(<source stage>)`` charges the strategy's per-message
+        generation cost (zero unless a service model is set)."""
+        topic = state.topics[0]
+        stage_name = self.stages[0].name
         for _ in range(count):
             if state.stop.is_set():
                 return
-            produce = self._fn("produce")
-            data = produce(ctx)
-            pe = self._fn("process_edge")
-            if pe is not None:
-                data = pe(ctx, data=data)
-            yield Service("produce", data)
+            data = self._invoke_source(ctx)
+            yield Service(stage_name, data)
             if state.stop.is_set():
                 return
             topic.produce(data, partition=device_idx % self.n_partitions)
             ctx.heartbeat()
 
-    def _consumer_body(self, ctx: TaskContext, state: _RunState, cid: str):
-        """One cloud consumer: join the group, then poll → dedup →
-        process → commit until the run stops or goes idle. The broker is
-        at-least-once across rebalances; dedup by msg_id gives
-        exactly-once *effect* at the application layer."""
-        group = state.group
+    def _stage_body(self, ctx: TaskContext, state: _RunState,
+                    stage_idx: int, cid: str):
+        """One consumer of stage ``stage_idx``: join the group, then
+        poll → dedup → process → forward/collect → commit until the run
+        stops or goes idle.  Every hop is at-least-once across
+        rebalances; per-stage dedup by msg_id gives exactly-once *effect*
+        end to end.  Intermediate stages forward their output into the
+        next hop's topic under the originating message's identity, so
+        produced→processed latency spans the whole continuum path."""
+        group = state.groups[stage_idx - 1]
         group.join(cid)
+        final = stage_idx == len(self.stages) - 1
+        out_topic = None if final else state.topics[stage_idx]
+        seen = state.seen[stage_idx - 1]
+        stage_name = self.stages[stage_idx].name
         clock = ctx.clock
         idle_deadline = clock.now() + state.timeout_s
         while not state.stop.is_set():
             msg = yield Poll(group, cid, timeout_s=0.2,
-                             wake_at=idle_deadline)
+                             wake_at=idle_deadline, stage=stage_name)
             if msg is None:
                 if (state.n_processed >= state.n_messages
                         or clock.now() >= idle_deadline):
@@ -238,67 +367,87 @@ class EdgeToCloudPipeline:
                 continue
             idle_deadline = clock.now() + state.timeout_s
             with state.lock:
-                dup = msg.msg_id in state.seen_ids
-                state.seen_ids.add(msg.msg_id)     # reserve
+                dup = msg.msg_id in seen
+                seen.add(msg.msg_id)               # reserve
             if dup:
                 group.commit(msg)
                 self.metrics.incr("pipeline.duplicates_dropped")
                 continue
-            inflight_key = (cid, ctx.attempt)
+            inflight_key = (stage_idx, cid, ctx.attempt)
             state.inflight[inflight_key] = msg.msg_id
             try:
                 data = msg.value()
-                yield Service("process_cloud", data)
-                fn = self._fn("process_cloud")
+                yield Service(stage_name, data)
+                fn = self._fn(stage_name)
                 out = fn(ctx, data=data)
             except BaseException:
                 # release the dedup reservation so the redelivery (from
                 # this task's retry or a rebalance) is processed, then let
                 # the strategy's retry machinery handle the failure.
                 with state.lock:
-                    state.seen_ids.discard(msg.msg_id)
+                    seen.discard(msg.msg_id)
                 state.inflight.pop(inflight_key, None)
                 raise
-            self.metrics.stamp(msg.msg_id, "processed", bytes=msg.nbytes)
-            group.commit(msg)
-            state.inflight.pop(inflight_key, None)
-            with state.lock:
-                state.n_processed += 1
-                if state.collect:
-                    state.results.append(out)
-                if (state.n_processed >= state.n_messages
-                        and state.t_done is None):
-                    state.t_done = clock.now()
-                    state.stop.set()
-            state.processed_sem.release()
+            # hop identity: forwarded messages carry the originating
+            # msg_id in their key so the final stamp links end to end
+            origin = msg.key or msg.msg_id
+            if final:
+                self.metrics.stamp(origin, "processed", bytes=msg.nbytes)
+                group.commit(msg)
+                state.inflight.pop(inflight_key, None)
+                with state.lock:
+                    state.n_processed += 1
+                    if state.collect:
+                        state.results.append(out)
+                    if (state.n_processed >= state.n_messages
+                            and state.t_done is None):
+                        state.t_done = clock.now()
+                        state.stop.set()
+                state.processed_sem.release()
+            else:
+                out_topic.produce(out, key=origin, partition=msg.partition,
+                                  msg_id=f"{origin}+h{stage_idx}")
+                group.commit(msg)
+                state.inflight.pop(inflight_key, None)
             ctx.heartbeat()
 
     # -- run -------------------------------------------------------------------
 
     def _setup_run(self, n_messages: int, timeout_s: float,
                    collect_results: bool) -> _RunState:
-        """Create the per-run topic/group/state (called by the strategy)."""
+        """Create the per-run topics/groups/state (called by the
+        strategy)."""
         # run-counter suffix, not a wall-time suffix: virtual runs restart
         # the clock at 0 and must not collide on topic names
-        topic = self.broker.create_topic(
-            f"{self.topic_name}-{next(_run_ids)}",
-            n_partitions=self.n_partitions, shaper=self.wan_shaper)
-        group = ConsumerGroup(topic, group_id="cloud-processing")
+        run_id = next(_run_ids)
+        topics: List[Topic] = []
+        groups: List[ConsumerGroup] = []
+        for i, stage in enumerate(self.stages[1:], start=1):
+            suffix = "" if i == 1 else f"-h{i - 1}"
+            topics.append(self.broker.create_topic(
+                f"{self.topic_name}-{run_id}{suffix}",
+                n_partitions=self.n_partitions,
+                shaper=self._shapers[i - 1]))
+            groups.append(ConsumerGroup(topics[-1],
+                                        group_id=f"{stage.name}-group"))
         # paper: messages split across devices, one partition per device
-        per_device = ([n_messages // self.n_edge_devices]
-                      * self.n_edge_devices)
-        for i in range(n_messages % self.n_edge_devices):
+        n_src = self.stage_tasks(0)
+        per_device = [n_messages // n_src] * n_src
+        for i in range(n_messages % n_src):
             per_device[i] += 1
-        self._topic = topic
-        self._group = group
-        return _RunState(topic=topic, group=group, per_device=per_device,
+        self._topics = topics
+        self._topic = topics[0]
+        self._group = groups[-1]
+        return _RunState(topics=topics, groups=groups,
+                         per_device=per_device,
+                         seen=[set() for _ in groups],
                          n_messages=n_messages, timeout_s=timeout_s,
                          collect=collect_results)
 
     def _finish(self, state: _RunState, wall_s: float) -> PipelineResult:
         self._group = None        # current_lag() reads 0 between runs
         n_prod = int(self.metrics.counter(
-            f"topic.{state.topic.name}.msgs_in"))
+            f"topic.{state.topics[0].name}.msgs_in"))
         return PipelineResult(results=state.results, metrics=self.metrics,
                               n_produced=n_prod,
                               n_processed=state.n_processed, wall_s=wall_s)
@@ -323,13 +472,14 @@ class EdgeToCloudPipeline:
         a pipeline of this shape (devices/consumers; workload from
         ``function_context['model']`` / ``['n_points']``; straggler
         speculation from this pipeline's ``speculative_factor``) under
-        its own ``SimExecutor`` across placements × WAN bands and returns
+        its own ``SimExecutor`` across placements × WAN bands — every
+        advisory cell carries its per-stage tier vector — and returns
         the ranked :class:`~repro.cost.advisor.AdvisorReport` — the
         paper's "evaluate task placement based on multiple factors" knob,
         multi-objectively: ``latency_budget`` caps predicted p95 latency
         (seconds), ``wan_budget`` caps advisory WAN megabytes (cells over
         budget are flagged infeasible and ranked last, never dropped),
-        and ``hybrid_reduce`` sweeps the hybrid placement's edge
+        and ``hybrid_reduce`` sweeps the hybrid/fog placements' edge
         pre-aggregation factor.  An explicit ``n_messages`` sets the
         per-cell advisory fidelity (default 32 — the whole grid in a few
         hundred ms); ``timeout_s``/``collect_results`` do not apply and
@@ -369,3 +519,67 @@ class EdgeToCloudPipeline:
         return strategy.run(self, n_messages=n_messages,
                             timeout_s=timeout_s,
                             collect_results=collect_results)
+
+
+class EdgeToCloudPipeline(ContinuumPipeline):
+    """Listing 2's object: the historical two-stage edge→cloud pipeline,
+    kept as a thin :class:`ContinuumPipeline` wrapper.  Parameter names
+    follow the paper's API; ``process_edge`` runs fused into the source
+    stage (pre-aggregation next to the generator), exactly as before."""
+
+    def __init__(self, *,
+                 pilot_cloud_processing: Pilot,
+                 pilot_edge: Pilot,
+                 pilot_cloud_broker: Optional[Pilot] = None,
+                 produce_function_handler: ProduceFn,
+                 process_cloud_function_handler: ProcessFn,
+                 process_edge_function_handler: Optional[ProcessFn] = None,
+                 function_context: Optional[dict] = None,
+                 n_edge_devices: Optional[int] = None,
+                 n_partitions: Optional[int] = None,
+                 topic_name: str = "edge-to-cloud",
+                 wan_shaper: Optional[WanShaper] = None,
+                 broker: Optional[Broker] = None,
+                 parameter_service: Optional[ParameterService] = None,
+                 placement: str = "explicit",
+                 placement_engine: Optional[PlacementEngine] = None,
+                 cloud_consumers: Optional[int] = None,
+                 metrics: Optional[MetricsRegistry] = None,
+                 max_retries: int = 2,
+                 speculative_factor: float = 0.0,
+                 heartbeat_timeout_s: float = 30.0,
+                 clock: Optional[Clock] = None):
+        self.pilot_edge = pilot_edge
+        self.pilot_cloud = pilot_cloud_processing
+        self.pilot_broker = pilot_cloud_broker or pilot_cloud_processing
+        n_src = n_edge_devices or pilot_edge.resource.n_workers
+        n_parts = n_partitions or n_src
+        # keep Kafka:Dask partition ratio constant (paper: "we keep the
+        # ratio of partitions constant between Kafka and Dask")
+        stages = [
+            StageSpec("produce", produce_function_handler,
+                      pilot=pilot_edge, n_tasks=n_src),
+            StageSpec("process_cloud", process_cloud_function_handler,
+                      pilot=pilot_cloud_processing,
+                      n_tasks=cloud_consumers or n_parts),
+        ]
+        super().__init__(
+            stages=stages, function_context=function_context,
+            n_partitions=n_parts, topic_name=topic_name,
+            shapers=[wan_shaper], broker=broker,
+            parameter_service=parameter_service, placement=placement,
+            placement_engine=placement_engine, metrics=metrics,
+            max_retries=max_retries,
+            speculative_factor=speculative_factor,
+            heartbeat_timeout_s=heartbeat_timeout_s, clock=clock)
+        # process_edge is hot-swappable like a stage even though it runs
+        # fused into the source body (legacy API)
+        self._fns["process_edge"] = process_edge_function_handler
+
+    def _invoke_source(self, ctx: TaskContext) -> Any:
+        produce = self._fn("produce")
+        data = produce(ctx)
+        pe = self._fn("process_edge")
+        if pe is not None:
+            data = pe(ctx, data=data)
+        return data

@@ -5,8 +5,12 @@ by application tasks; resource management is decoupled from workload
 management. On the original infrastructure a pilot is a VM / HPC partition /
 RasPi. Here a pilot is a **named slice of compute**:
 
+* ``tier='device'`` — sensor-class SoC slots right next to the data —
+  generation only;
 * ``tier='edge'``   — host CPU thread slots (the paper's RasPi-class Dask
   task: 1 core / ~4 GB) — data generation, light pre-processing;
+* ``tier='fog'``    — metro gateway boxes between edge site and
+  datacenter — aggregation along the path;
 * ``tier='cloud'``  — a sub-mesh slice of the JAX device mesh (on CPU-only
   containers this is a slice of host devices; on TPU the same code slices the
   pod) — heavy processing, training, serving;
@@ -35,13 +39,16 @@ import numpy as np
 
 from repro.sim.clock import Clock, as_clock
 
-TIERS = ("edge", "cloud", "hpc")
+# the default continuum's tier names (device → edge → fog → cloud, plus
+# the hpc accounting tier). Custom topologies may use any non-empty tier
+# name — tiers are continuum-profile keys, not a closed enum.
+TIERS = ("device", "edge", "fog", "cloud", "hpc")
 
 
 @dataclass(frozen=True)
 class ComputeResource:
     """Paper's pilot_compute_description analog: what to allocate where."""
-    tier: str                         # edge | cloud | hpc
+    tier: str                         # device | edge | fog | cloud | hpc | …
     n_devices: int = 0                # mesh devices (cloud/hpc pilots)
     n_workers: int = 1                # executor threads (edge pilots)
     mesh_axes: tuple = ("data",)      # axis names for the pilot's sub-mesh
@@ -51,8 +58,9 @@ class ComputeResource:
     label: str = ""
 
     def __post_init__(self):
-        if self.tier not in TIERS:
-            raise ValueError(f"tier must be one of {TIERS}, got {self.tier}")
+        if not self.tier or not isinstance(self.tier, str):
+            raise ValueError(f"tier must be a non-empty string (e.g. one "
+                             f"of {TIERS}), got {self.tier!r}")
 
 
 class PilotError(RuntimeError):

@@ -79,10 +79,15 @@ class PlacementDecision:
 class PlacementEngine:
     """Scores pilots through a :class:`~repro.cost.model.CostModel`.
 
+    Any tier in the continuum profile is scored at *its own* device rate
+    — a fog pilot is priced as fog hardware, not silently as cloud (the
+    historical edge-vs-everything-else branching mispriced every
+    intermediate tier at cloud rates).
+
     ``links`` overrides the link table (e.g. one WAN band of the Fig-3
-    sweep); ``edge_flops``/``device_flops`` override the profile's tier
-    rates (back-compat knobs — prefer passing a ``cost_model`` built on a
-    custom :class:`~repro.cost.profiles.ContinuumProfile`)."""
+    sweep); ``edge_flops``/``device_flops`` override the edge and
+    cloud/hpc rates (back-compat knobs — prefer passing a ``cost_model``
+    built on a custom :class:`~repro.cost.profiles.ContinuumProfile`)."""
 
     def __init__(self, links: Optional[Dict] = None,
                  edge_flops: Optional[float] = None,
@@ -90,17 +95,37 @@ class PlacementEngine:
                  cost_model: Optional[CostModel] = None):
         self.cost = cost_model or default_cost_model()
         self.links = dict(self.cost.links if links is None else links)
+        self._tier_overrides: Dict[str, float] = {}
+        if edge_flops is not None:
+            self._tier_overrides["edge"] = edge_flops
+        if device_flops is not None:
+            self._tier_overrides["cloud"] = device_flops
+            self._tier_overrides["hpc"] = device_flops
         self.edge_flops = (edge_flops if edge_flops is not None
                            else self.cost.tier_flops("edge"))
         self.device_flops = (device_flops if device_flops is not None
                              else self.cost.tier_flops("cloud"))
 
+    def tier_rate(self, tier: str) -> float:
+        """Per-device peak FLOP/s of a tier: the override when set, else
+        the profile's device rate.  Tiers the profile doesn't know price
+        conservatively at the *slowest* known tier's rate — an optimistic
+        (fast) guess would bias auto-placement onto unmodeled tiers."""
+        rate = self._tier_overrides.get(tier)
+        if rate is not None:
+            return rate
+        try:
+            return self.cost.tier_flops(tier)
+        except KeyError:
+            rates = [tp.device.peak_flops
+                     for tp in self.cost.profile.tiers.values()]
+            return min(rates) if rates else self.device_flops
+
     def pilot_flops(self, pilot: Pilot) -> float:
         if pilot.mesh is not None:
-            return self.device_flops * len(pilot.devices)
-        if pilot.tier == "edge":
-            return self.edge_flops * pilot.resource.n_workers
-        return self.device_flops * pilot.resource.n_workers
+            # mesh pilots aggregate cloud-class accelerator devices
+            return self.tier_rate(pilot.tier) * len(pilot.devices)
+        return self.tier_rate(pilot.tier) * pilot.resource.n_workers
 
     def estimate(self, task: TaskProfile, pilot: Pilot,
                  queue_depth: int = 0) -> PlacementDecision:

@@ -18,12 +18,14 @@ from repro.cost.calibrate import (CALIBRATION_PATH, Calibrator, ModelCost,
 from repro.cost.model import CostModel, default_cost_model
 from repro.cost.profiles import (DEFAULT_PROFILE, DEFAULT_WAN_BAND,
                                  WAN_BANDS, ContinuumProfile, DeviceProfile,
-                                 LinkModel, TierProfile)
+                                 Hop, LinkModel, Route, TierProfile,
+                                 Topology)
 
 _LAZY = ("PlacementAdvisor", "AdvisorReport", "Advice")
 
 __all__ = [
     "LinkModel", "DeviceProfile", "TierProfile", "ContinuumProfile",
+    "Topology", "Route", "Hop",
     "WAN_BANDS", "DEFAULT_WAN_BAND", "DEFAULT_PROFILE",
     "ModelCost", "Calibrator", "load_calibration", "save_calibration",
     "CALIBRATION_PATH",

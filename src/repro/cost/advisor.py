@@ -2,12 +2,14 @@
 applications "evaluate task placement based on multiple factors (e.g.,
 model complexities, throughput, and latency)").
 
-:class:`PlacementAdvisor` runs the *genuine*
-:class:`~repro.core.faas.EdgeToCloudPipeline` under
-:class:`~repro.core.executor.SimExecutor` across
-{placements} × {WAN bands} — real broker offsets, consumer groups, dedup,
-WAN token bucket, only time is virtual — and returns a ranked
-recommendation.  The ranking is **multi-objective**: every cell reports
+:class:`PlacementAdvisor` runs the *genuine* pipeline (the two-stage
+:class:`~repro.core.faas.EdgeToCloudPipeline` wrapper, or the 3-stage
+edge→fog→cloud :class:`~repro.core.faas.ContinuumPipeline` for the fog
+placement) under :class:`~repro.core.executor.SimExecutor` across
+{placements over the full tier set} × {WAN bands} — real broker offsets,
+consumer groups, dedup, WAN token bucket, only time is virtual — and
+returns a ranked recommendation whose every cell carries its per-stage
+tier vector (``Advice.tiers``).  The ranking is **multi-objective**: every cell reports
 predicted throughput, the p50/p95/p99 latency tail, and exact WAN bytes;
 ``latency_budget=`` / ``wan_budget=`` constraints *filter-then-rank*
 (feasible cells outrank infeasible ones, but infeasible cells stay in the
@@ -41,7 +43,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Union
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.cost.model import CostModel, default_cost_model
 from repro.sim.scenarios import (PLACEMENTS, ModelSpec, Scenario,
@@ -50,7 +52,10 @@ from repro.sim.scenarios import (PLACEMENTS, ModelSpec, Scenario,
 
 @dataclass(frozen=True)
 class Advice:
-    """One evaluated (placement, WAN band[, hybrid_reduce]) cell."""
+    """One evaluated (placement, WAN band[, hybrid_reduce]) cell.
+    ``tiers`` is the per-stage execution tier vector of the emulated
+    pipeline (e.g. ``('edge', 'fog', 'cloud')`` for the 3-stage fog
+    placement)."""
     model: str
     placement: str
     wan_band: str
@@ -63,7 +68,8 @@ class Advice:
     latency_p50_s: float = 0.0
     latency_p99_s: float = 0.0
     wan_bytes: float = 0.0
-    hybrid_reduce: Optional[int] = None   # set on hybrid cells only
+    tiers: Tuple[str, ...] = ()           # per-stage tier vector
+    hybrid_reduce: Optional[int] = None   # set on hybrid/fog cells only
     feasible: bool = True                 # meets the advise() budgets
     spec_launches: int = 0                # straggler speculation accounting
     spec_wins: int = 0
@@ -72,6 +78,7 @@ class Advice:
 
     def row(self) -> Dict[str, object]:
         return {"model": self.model, "placement": self.placement,
+                "tiers": list(self.tiers),
                 "wan": self.wan_band,
                 "msgs_per_s": self.throughput_msgs_s,
                 "lat_mean_s": self.latency_mean_s,
@@ -138,8 +145,8 @@ class AdvisorReport:
         return out
 
     def table(self) -> str:
-        hdr = (f"{'model':>12} {'wan':>8} {'placement':>9} {'red':>4} "
-               f"{'rank':>4} {'msg/s':>9} {'lat-p50 s':>9} "
+        hdr = (f"{'model':>12} {'wan':>8} {'placement':>9} {'path':>5} "
+               f"{'red':>4} {'rank':>4} {'msg/s':>9} {'lat-p50 s':>9} "
                f"{'lat-p95 s':>9} {'lat-p99 s':>9} {'WAN MB':>8}")
         lines = [hdr, "-" * len(hdr)]
         for r in self.rows():
@@ -147,9 +154,11 @@ class AdvisorReport:
             if not r["feasible"]:
                 mark += " [over budget]"
             red = "-" if r["hybrid_reduce"] is None else r["hybrid_reduce"]
+            path = "-".join(t[0] for t in r["tiers"])
             lines.append(
                 f"{r['model']:>12} {r['wan']:>8} {r['placement']:>9} "
-                f"{red:>4} {r['rank']:>4} {r['msgs_per_s']:>9.3f} "
+                f"{path:>5} {red:>4} {r['rank']:>4} "
+                f"{r['msgs_per_s']:>9.3f} "
                 f"{r['lat_p50_s']:>9.3f} {r['lat_p95_s']:>9.3f} "
                 f"{r['lat_p99_s']:>9.3f} {r['wan_mb']:>8.2f}{mark}")
         return "\n".join(lines)
@@ -236,15 +245,18 @@ class PlacementAdvisor:
             table = self.cost.profile.wan_bands
             bands = sorted(table, key=lambda b: table[b].bandwidth)
         reduces = tuple(int(x) for x in hybrid_reduce or ())
+        # hybrid and fog both pre-aggregate (on the edge vs on the fog
+        # tier), so the reduce-factor sweep applies to both placements
+        reduced_placements = ("hybrid", "fog")
         for band in bands:
             for placement in placements:
-                sweep = reduces if placement == "hybrid" and reduces \
-                    else (None,)
+                sweep = reduces if placement in reduced_placements \
+                    and reduces else (None,)
                 for red in sweep:
                     mspec = (spec if red is None
                              else dataclasses.replace(spec,
                                                       hybrid_reduce=red))
-                    r = run_scenario(Scenario(
+                    sc = Scenario(
                         model=mspec, placement=placement, wan_band=band,
                         n_messages=self.n_messages,
                         n_devices=self.n_devices,
@@ -252,7 +264,8 @@ class PlacementAdvisor:
                         n_points=self.n_points,
                         seed=self.seed, service_sigma=self.service_sigma,
                         speculative_factor=self.speculative_factor,
-                        cost=self.cost))
+                        cost=self.cost)
+                    r = run_scenario(sc)
                     feasible = (
                         (latency_budget is None
                          or r.latency_p95_s <= latency_budget)
@@ -260,6 +273,7 @@ class PlacementAdvisor:
                              or r.wan_mbytes <= wan_budget))
                     cells.append(Advice(
                         model=spec.name, placement=placement,
+                        tiers=r.tiers,
                         wan_band=band,
                         throughput_msgs_s=r.throughput_msgs_s,
                         latency_mean_s=r.latency_mean_s,
@@ -269,7 +283,8 @@ class PlacementAdvisor:
                         wan_mbytes=r.wan_mbytes, wan_bytes=r.wan_bytes,
                         makespan_s=r.makespan_s,
                         hybrid_reduce=(mspec.hybrid_reduce
-                                       if placement == "hybrid" else None),
+                                       if placement in reduced_placements
+                                       else None),
                         feasible=feasible,
                         spec_launches=r.spec_launches,
                         spec_wins=r.spec_wins,

@@ -19,7 +19,7 @@ from typing import Callable, Dict, Mapping, Optional, Tuple
 
 from repro.cost.calibrate import ModelCost, load_calibration
 from repro.cost.profiles import (DEFAULT_PROFILE, ContinuumProfile,
-                                 LinkModel)
+                                 LinkModel, Route)
 
 # cloud-side result ingest for edge-placed models: merging a published
 # model output costs a few flops per serialized value (the only "analytic"
@@ -65,6 +65,11 @@ class CostModel:
     def link(self, a: str, b: str) -> LinkModel:
         return self.profile.link(a, b)
 
+    def route(self, src: str, dst: str, nbytes: float = 0.0) -> Route:
+        """Shortest-time multi-hop route between two tiers (see
+        :meth:`~repro.cost.profiles.ContinuumProfile.route`)."""
+        return self.profile.route(src, dst, nbytes)
+
     def tier_flops(self, tier: str, n_workers: int = 1) -> float:
         """Aggregate peak FLOP/s of ``n_workers`` devices of a tier."""
         return self.profile.tier(tier).device.peak_flops * max(n_workers, 1)
@@ -77,11 +82,12 @@ class CostModel:
         return flops / max(self.tier_flops(tier, n_workers), 1.0)
 
     def transfer_s(self, nbytes: float, src: str, dst: str) -> float:
-        """Seconds to move ``nbytes`` between tiers (0 bytes = free)."""
+        """Seconds to move ``nbytes`` between tiers (0 bytes = free),
+        priced over the *routed* path: tiers without a direct link pay
+        every hop's serialization plus the accumulated per-hop latency."""
         if not nbytes:
             return 0.0
-        link = self.link(src, dst)
-        return nbytes / link.bandwidth + link.latency_s
+        return self.route(src, dst, nbytes).transfer_s(nbytes)
 
     # -- per-model estimates ----------------------------------------------
 

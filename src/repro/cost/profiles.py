@@ -8,16 +8,23 @@ Before this subsystem existed the cost knowledge was triplicated:
 nothing consumed.  Now:
 
 * :class:`DeviceProfile` — one device's sustained peak rates (the paper's
-  testbed: RasPi-4-class edge nodes, EC2-class cloud workers),
-* :class:`TierProfile` — a continuum tier (edge / cloud / hpc) backed by a
-  device profile plus its intra-tier link,
+  testbed: sensor-class devices, RasPi-4-class edge nodes, fog gateways,
+  EC2-class cloud workers),
+* :class:`TierProfile` — a continuum tier (device / edge / fog / cloud /
+  hpc) backed by a device profile plus its intra-tier link,
 * :class:`LinkModel`  — bandwidth (bytes/s) + latency between tiers,
+* :class:`Topology`   — the tier *graph*: tiers as nodes, links as edges,
+  deterministic shortest-time multi-hop routing (:class:`Route`) with
+  per-hop latency accumulation,
 * :data:`WAN_BANDS`   — the paper's iPerf bands as the one shared link
   table (``sim.scenarios.WAN_BANDS`` and ``core.placement.DEFAULT_LINKS``
-  are both import-time snapshots of this dict — pinned equal by a
-  regression test),
+  are both import-time snapshots of the default continuum instance —
+  pinned equal by a regression test),
 * :class:`ContinuumProfile` — the assembled continuum the
-  :class:`~repro.cost.model.CostModel` prices against.
+  :class:`~repro.cost.model.CostModel` prices against.  The default
+  instance is the 4-tier device/edge/fog/cloud continuum (plus the hpc
+  accounting tier): transfers between tiers without a direct link ride
+  the topology's routed multi-hop path.
 
 Per-model compute costs (FLOPs/point, efficiencies, service-time noise)
 live next door in :mod:`repro.cost.calibrate` — measured from the compiled
@@ -25,8 +32,9 @@ live next door in :mod:`repro.cost.calibrate` — measured from the compiled
 """
 from __future__ import annotations
 
+import heapq
 from dataclasses import dataclass, field, replace
-from typing import Dict, Mapping, Optional, Tuple
+from typing import Dict, Iterable, List, Mapping, Optional, Tuple
 
 
 @dataclass(frozen=True)
@@ -54,6 +62,121 @@ DEFAULT_WAN_BAND = "10mbit"
 
 
 @dataclass(frozen=True)
+class Hop:
+    """One directed traversal of a link along a route."""
+    src: str
+    dst: str
+    link: LinkModel
+
+
+@dataclass(frozen=True)
+class Route:
+    """A multi-hop path through the continuum topology.
+
+    Transfer time is store-and-forward: every hop serializes the full
+    message (``nbytes / bandwidth``) and adds its own latency — per-hop
+    latency *accumulates*, it is not collapsed to the slowest hop.
+    """
+    src: str
+    dst: str
+    hops: Tuple[Hop, ...]
+
+    @property
+    def tiers(self) -> Tuple[str, ...]:
+        """The tier sequence the route visits (src first)."""
+        return (self.src,) + tuple(h.dst for h in self.hops)
+
+    @property
+    def latency_s(self) -> float:
+        return sum(h.link.latency_s for h in self.hops)
+
+    def transfer_s(self, nbytes: float) -> float:
+        """Seconds to move ``nbytes`` end to end (store-and-forward)."""
+        return sum(nbytes / h.link.bandwidth + h.link.latency_s
+                   for h in self.hops)
+
+    def as_link(self) -> LinkModel:
+        """The serialized-equivalent single link: store-and-forward over
+        the hops equals one link with the harmonic-sum bandwidth and the
+        accumulated latency, for *any* message size."""
+        if not self.hops:
+            return LinkModel(bandwidth=float("inf"), latency_s=0.0)
+        inv_bw = sum(1.0 / h.link.bandwidth for h in self.hops)
+        return LinkModel(bandwidth=1.0 / inv_bw, latency_s=self.latency_s)
+
+
+class Topology:
+    """The continuum tier graph: tiers as nodes, links as undirected
+    edges, Dijkstra shortest-*time* routing.
+
+    Edge weight for a transfer of ``nbytes`` is the store-and-forward hop
+    time ``nbytes / bandwidth + latency_s``; with ``nbytes=0`` routing
+    minimizes accumulated latency.  Ties break on (hop count, tier name)
+    so routes are deterministic — a run is a pure function of the profile.
+    """
+
+    def __init__(self, links: Mapping[Tuple[str, str], LinkModel],
+                 tiers: Iterable[str] = ()):
+        self._adj: Dict[str, Dict[str, LinkModel]] = {t: {} for t in tiers}
+        for (a, b), link in links.items():
+            self._adj.setdefault(a, {})[b] = link
+            self._adj.setdefault(b, {})[a] = link
+
+    @property
+    def tiers(self) -> Tuple[str, ...]:
+        return tuple(sorted(self._adj))
+
+    def neighbors(self, tier: str) -> Dict[str, LinkModel]:
+        return dict(self._adj.get(tier, {}))
+
+    def link(self, a: str, b: str) -> Optional[LinkModel]:
+        """The direct link between two tiers, or None."""
+        return self._adj.get(a, {}).get(b)
+
+    def route(self, src: str, dst: str,
+              nbytes: float = 0.0) -> Optional[Route]:
+        """Shortest-time route ``src → dst`` for an ``nbytes`` message, or
+        None when the tiers are disconnected.  ``route(a, a)`` is the
+        empty route (zero hops, zero time)."""
+        if src == dst:
+            return Route(src, dst, ())
+        if src not in self._adj or dst not in self._adj:
+            return None
+        # (total_time, hop_count, tier) keys: deterministic and
+        # latency-accumulating; hop count then name break exact ties
+        best: Dict[str, Tuple[float, int]] = {src: (0.0, 0)}
+        prev: Dict[str, Tuple[str, LinkModel]] = {}
+        heap: List[Tuple[float, int, str]] = [(0.0, 0, src)]
+        done = set()
+        while heap:
+            t, n, tier = heapq.heappop(heap)
+            if tier in done:
+                continue
+            done.add(tier)
+            if tier == dst:
+                break
+            for nxt in sorted(self._adj[tier]):
+                if nxt in done:
+                    continue
+                link = self._adj[tier][nxt]
+                cost = t + nbytes / link.bandwidth + link.latency_s
+                cand = (cost, n + 1)
+                if nxt not in best or cand < best[nxt]:
+                    best[nxt] = cand
+                    prev[nxt] = (tier, link)
+                    heapq.heappush(heap, (cost, n + 1, nxt))
+        if dst not in prev:
+            return None
+        hops: List[Hop] = []
+        at = dst
+        while at != src:
+            frm, link = prev[at]
+            hops.append(Hop(frm, at, link))
+            at = frm
+        return Route(src, dst, tuple(reversed(hops)))
+
+
+@dataclass(frozen=True)
 class DeviceProfile:
     """Sustained peak rates of one device class."""
     name: str
@@ -62,12 +185,25 @@ class DeviceProfile:
     memory_gb: float = 4.0
 
 
-# The paper's testbed devices. Edge = RasPi-class (1 core / 4 GB Dask
-# task); cloud/hpc = one EC2-class worker core-set per Dask worker.
+# The continuum's device classes, sensor to datacenter. Device = the
+# sensing SoC next to the data; edge = RasPi-class (1 core / 4 GB Dask
+# task); fog = a metro gateway box between edge site and datacenter;
+# cloud/hpc = one EC2-class worker core-set per Dask worker.
+DEVICE_SOC = DeviceProfile("device-soc", peak_flops=1e9, mem_bw=1e9,
+                           memory_gb=0.5)
 RASPI_4B = DeviceProfile("raspi-4b", peak_flops=5e9, mem_bw=4e9,
                          memory_gb=4.0)
+FOG_NODE = DeviceProfile("fog-node", peak_flops=20e9, mem_bw=10e9,
+                         memory_gb=8.0)
 CLOUD_CPU = DeviceProfile("cloud-cpu", peak_flops=50e9, mem_bw=20e9,
                           memory_gb=16.0)
+
+# non-WAN continuum links of the default topology: the device→edge local
+# hop (wireless/LAN) and the edge→fog metro hop. Distinct latency values
+# from every WAN band so ``with_wan`` re-pricing never touches them.
+DEVICE_EDGE_LINK = LinkModel(bandwidth=100e6 / 8.0, latency_s=0.005)
+EDGE_FOG_LINK = LinkModel(bandwidth=100e6 / 8.0, latency_s=0.020)
+CLOUD_HPC_LINK = LinkModel(bandwidth=1e9, latency_s=0.020)
 
 
 @dataclass(frozen=True)
@@ -99,19 +235,51 @@ class ContinuumProfile:
     def wan(self, band: Optional[str] = None) -> LinkModel:
         return self.wan_bands[band or self.default_wan]
 
+    @property
+    def topology(self) -> Topology:
+        """The tier graph (links as undirected edges) this profile routes
+        multi-hop transfers over — built once per profile (the profile is
+        frozen, so the graph is a pure function of it)."""
+        topo = self.__dict__.get("_topology")
+        if topo is None:
+            topo = Topology(self.links, tiers=self.tiers)
+            object.__setattr__(self, "_topology", topo)
+        return topo
+
+    def _fallback_link(self) -> LinkModel:
+        """Disconnected tier pairs price at the default WAN band with a
+        conservative doubled latency (the historical unknown-pair rule)."""
+        wan = self.wan()
+        return LinkModel(bandwidth=wan.bandwidth,
+                         latency_s=2.0 * max(wan.latency_s, 0.1))
+
+    def route(self, a: str, b: str, nbytes: float = 0.0) -> Route:
+        """Shortest-time route between two tiers.  Same-tier traffic rides
+        the intra-tier link as a single hop; cross-tier traffic takes the
+        topology's routed path (one hop when a direct link exists — a
+        detour is never picked unless it is strictly faster); tiers the
+        topology cannot connect fall back to a single synthetic
+        default-WAN hop so pricing never dead-ends."""
+        if a == b:
+            tp = self.tiers.get(a)
+            intra = tp.intra_link if tp else LinkModel(10e9, 0.0)
+            return Route(a, b, (Hop(a, b, intra),))
+        r = self.topology.route(a, b, nbytes)
+        if r is not None:
+            return r
+        return Route(a, b, (Hop(a, b, self._fallback_link()),))
+
     def link(self, a: str, b: str) -> LinkModel:
-        """Link between two tiers; same-tier rides the intra-tier link,
-        unknown cross-tier pairs fall back to the default WAN band with a
-        conservative doubled latency."""
+        """Effective link between two tiers: the direct link when one
+        exists, otherwise the routed path's serialized-equivalent link
+        (harmonic-sum bandwidth, accumulated latency)."""
         if a == b:
             tp = self.tiers.get(a)
             return tp.intra_link if tp else LinkModel(10e9, 0.0)
         link = self.links.get((a, b)) or self.links.get((b, a))
         if link is not None:
             return link
-        wan = self.wan()
-        return LinkModel(bandwidth=wan.bandwidth,
-                         latency_s=2.0 * max(wan.latency_s, 0.1))
+        return self.route(a, b).as_link()
 
     def with_wan(self, band: str) -> "ContinuumProfile":
         """The same continuum with every WAN link re-priced at a named
@@ -130,17 +298,25 @@ def _default_profile() -> ContinuumProfile:
     return ContinuumProfile(
         name="paper-testbed",
         tiers={
+            "device": TierProfile("device", DEVICE_SOC),
             "edge": TierProfile("edge", RASPI_4B),
+            "fog": TierProfile("fog", FOG_NODE),
             "cloud": TierProfile("cloud", CLOUD_CPU),
             "hpc": TierProfile("hpc", CLOUD_CPU),
         },
         links={
+            ("device", "edge"): DEVICE_EDGE_LINK,
+            ("edge", "fog"): EDGE_FOG_LINK,
+            ("fog", "cloud"): wan,
             ("edge", "cloud"): wan,
             ("edge", "hpc"): wan,
-            ("cloud", "hpc"): LinkModel(bandwidth=1e9, latency_s=0.020),
+            ("cloud", "hpc"): CLOUD_HPC_LINK,
         })
 
 
-# the profile everything defaults to: the paper's RasPi + EC2 testbed with
-# the constrained 10 Mbit/s WAN between edge and cloud/hpc
+# the profile everything defaults to: the 4-tier device/edge/fog/cloud
+# continuum (plus the hpc accounting tier) built on the paper's RasPi +
+# EC2 testbed, with the constrained 10 Mbit/s WAN between edge/fog and
+# cloud/hpc. Tiers without a direct link (e.g. device→cloud) route
+# multi-hop through the topology.
 DEFAULT_PROFILE = _default_profile()

@@ -12,13 +12,22 @@ the production code paths, only time is virtual.  A sweep of {model} ×
 {placement} × {WAN band} that takes hours of real pipeline time (paper
 Fig 2/3) replays in milliseconds with bit-reproducible metrics.
 
-Placement modalities (the paper's deployment modalities, §II-C):
+Placement modalities (the paper's deployment modalities, §II-C, plus the
+continuum's intermediate tier):
 
 * ``cloud``  — raw points cross the WAN; the model runs on the cloud tier.
 * ``edge``   — the model runs next to the generator; only the (small)
   model output crosses the WAN.
 * ``hybrid`` — an edge pre-aggregation stage shrinks each message by
   ``hybrid_reduce`` before the WAN hop; the model finishes on the cloud.
+* ``fog``    — a genuine 3-stage :class:`~repro.core.faas.ContinuumPipeline`:
+  raw points ride the edge→fog metro link, the pre-aggregation runs *on
+  the fog tier*, and only the reduced message crosses the WAN to the
+  cloud model — the per-stage tier vector is ``(edge, fog, cloud)``.
+
+Every scenario row carries its per-stage tier vector
+(``ScenarioResult.row()["tiers"]``) so sweeps over arbitrary topologies
+stay self-describing.
 
 Cost model: everything is priced by the unified :mod:`repro.cost`
 subsystem. ``WAN_BANDS`` below is an import-time snapshot of the shared
@@ -51,7 +60,7 @@ import numpy as np
 from repro.core.broker import WanShaper
 from repro.core.elastic import AutoScaler, ScalePolicy
 from repro.core.executor import SimExecutor
-from repro.core.faas import EdgeToCloudPipeline
+from repro.core.faas import ContinuumPipeline, EdgeToCloudPipeline, StageSpec
 from repro.core.monitoring import MetricsRegistry
 from repro.core.pilot import ComputeResource, PilotManager
 from repro.core.placement import PlacementEngine, TaskProfile
@@ -70,7 +79,7 @@ WAN_BANDS: Dict[str, Tuple[float, float]] = {
     for name, link in _WAN_LINKS.items()
 }
 
-PLACEMENTS = ("edge", "cloud", "hybrid")
+PLACEMENTS = ("edge", "cloud", "hybrid", "fog")
 
 
 @dataclass(frozen=True)
@@ -149,11 +158,12 @@ class Scenario:
     calibration, pair it with a matching spec
     (``model=model_specs(cost)[name]``), as the PlacementAdvisor does."""
     model: ModelSpec = KMEANS                 # calibrated k-means
-    placement: str = "cloud"                  # edge | cloud | hybrid
+    placement: str = "cloud"                  # edge | cloud | hybrid | fog
     wan_band: str = "100mbit"                 # key into WAN_BANDS
     n_messages: int = 64
     n_devices: int = 4                        # edge devices == partitions
     n_consumers: Optional[int] = None         # default: n_devices
+    n_fog: Optional[int] = None               # fog-stage tasks (fog only)
     n_points: int = 2_500                     # points per message
     gen_s_per_point: float = DEFAULT_GEN_S_PER_POINT  # Mini-App gen cost
     failures: Tuple[FailureSpec, ...] = ()
@@ -205,6 +215,9 @@ class ScenarioResult:
     latency_p50_s: float = 0.0        # tail decomposition (multi-objective)
     latency_p99_s: float = 0.0
     wan_bytes: float = 0.0            # exact bytes through the topic
+    # per-stage execution tier vector, read off the *built* pipeline's
+    # pilots (the one source of truth — never a per-placement literal)
+    tiers: Tuple[str, ...] = ()
     spec_launches: int = 0            # straggler speculation accounting
     spec_wins: int = 0                # (wins + losses + cancelled == launches)
     spec_losses: int = 0
@@ -216,6 +229,7 @@ class ScenarioResult:
         s = self.scenario
         return {
             "model": s.model.name, "placement": s.placement,
+            "tiers": list(self.tiers),
             "wan": s.wan_band, "messages": s.n_messages,
             "processed": self.n_processed, "dups": self.n_duplicates,
             "makespan_s": self.makespan_s,
@@ -246,6 +260,13 @@ def _edge_compute_s(sc: Scenario) -> float:
     return 0.0
 
 
+def _fog_compute_s(sc: Scenario) -> float:
+    """Per-message fog-stage service time (pre-aggregation on the fog
+    tier; fog placement only)."""
+    return sc.cost_model.compute_s(
+        sc.model.preprocess_flops_per_point * sc.n_points, "fog")
+
+
 def _cloud_compute_s(sc: Scenario) -> float:
     """Per-message cloud-stage service time (one consumer slot)."""
     m = sc.model
@@ -257,14 +278,20 @@ def _cloud_compute_s(sc: Scenario) -> float:
     return sc.cost_model.compute_s(m.flops_per_point * points, "cloud")
 
 
+def _reduced_payload(sc: Scenario) -> np.ndarray:
+    return np.zeros((max(sc.n_points // sc.model.hybrid_reduce, 1),
+                     N_FEATURES), np.float64)
+
+
 def _payload(sc: Scenario) -> np.ndarray:
-    """What actually crosses the broker for this placement (real numpy
-    serialization, so WAN byte accounting is exact)."""
+    """What the *source* stage puts on its first broker hop (real numpy
+    serialization, so byte accounting is exact): edge placement publishes
+    only the model output, hybrid the edge-reduced message, cloud and fog
+    the raw points (fog reduces downstream, on the fog tier)."""
     if sc.placement == "edge":
         return np.zeros(max(sc.model.output_bytes // 8, 1), np.float64)
     if sc.placement == "hybrid":
-        return np.zeros((max(sc.n_points // sc.model.hybrid_reduce, 1),
-                         N_FEATURES), np.float64)
+        return _reduced_payload(sc)
     return np.zeros((sc.n_points, N_FEATURES), np.float64)
 
 
@@ -272,10 +299,11 @@ def _service_model(sc: Scenario):
     """Stage → virtual service seconds, priced by the shared CostModel
     (optionally with the calibrated lognormal noise)."""
     produce_s = sc.gen_s_per_point * sc.n_points + _edge_compute_s(sc)
-    cloud_s = _cloud_compute_s(sc)
+    stages = {"produce": produce_s, "process_cloud": _cloud_compute_s(sc)}
+    if sc.placement == "fog":
+        stages["process_fog"] = _fog_compute_s(sc)
     return sc.cost_model.service_model(
-        {"produce": produce_s, "process_cloud": cloud_s},
-        sigma=sc.effective_service_sigma, seed=sc.seed)
+        stages, sigma=sc.effective_service_sigma, seed=sc.seed)
 
 
 def _wan_link(sc: Scenario):
@@ -290,24 +318,35 @@ def _wan_link(sc: Scenario):
 
 def placement_estimates(sc: Scenario) -> Dict[str, float]:
     """PlacementEngine per-tier completion-time estimates for one message
-    of this scenario, priced over this scenario's WAN band."""
+    of this scenario, priced over this scenario's WAN band — the full
+    tier set (edge, fog, cloud), so the analytic view ranks the same
+    candidates the DES sweeps."""
     wan = _wan_link(sc)
-    links = {("edge", "cloud"): wan, ("edge", "hpc"): wan}
+    links = {("edge", "cloud"): wan, ("edge", "hpc"): wan,
+             ("fog", "cloud"): wan}
     eng = PlacementEngine(links=links, cost_model=sc.cost_model)
     mgr = PilotManager(devices=())
     edge = mgr.submit_pilot(ComputeResource(tier="edge",
                                             n_workers=sc.n_devices))
+    fog = mgr.submit_pilot(ComputeResource(
+        tier="fog", n_workers=sc.n_fog or sc.n_devices))
     n_cons = sc.n_consumers or sc.n_devices
     cloud = mgr.submit_pilot(ComputeResource(tier="cloud",
                                              n_workers=n_cons))
     return eng.compare_tiers(sc.model.task_profile(sc.n_points),
-                             [edge, cloud])
+                             [edge, fog, cloud])
 
 
 def build_pipeline(sc: Scenario):
     """Construct the genuine pipeline + SimExecutor for one scenario.
     Returns ``(pipeline, executor, manager)`` — run with
-    ``pipeline.run(n_messages=sc.n_messages, scheduler=executor)``."""
+    ``pipeline.run(n_messages=sc.n_messages, scheduler=executor)``.
+
+    ``edge``/``cloud``/``hybrid`` build the two-stage
+    :class:`EdgeToCloudPipeline` wrapper; ``fog`` builds a genuine
+    3-stage :class:`ContinuumPipeline` (edge → fog → cloud) whose first
+    hop rides the edge→fog metro link and whose second hop rides the
+    scenario's WAN band."""
     from repro.sim.clock import SimClock
     if sc.placement not in PLACEMENTS:
         raise ValueError(f"placement must be one of {PLACEMENTS}")
@@ -322,20 +361,45 @@ def build_pipeline(sc: Scenario):
                                              n_workers=n_cons))
     bw_bps, rtt = wan.bandwidth_bps, wan.latency_s
     payload = _payload(sc)
-    pipe = EdgeToCloudPipeline(
-        pilot_cloud_processing=cloud, pilot_edge=edge,
-        produce_function_handler=lambda ctx: payload,
-        process_cloud_function_handler=lambda ctx, data=None: None,
-        n_edge_devices=sc.n_devices, n_partitions=sc.n_devices,
-        cloud_consumers=n_cons, topic_name="e2c",
-        wan_shaper=WanShaper(bandwidth_bps=bw_bps, rtt_s=rtt, sleep=False),
-        metrics=metrics, clock=clock,
-        speculative_factor=sc.speculative_factor,
-        # service times are priced by the service model, not heartbeats;
-        # only explicit "silent" failure injection should trip the monitor
-        heartbeat_timeout_s=(30.0 if any(f.kind == "silent"
-                                         for f in sc.failures)
-                             else sc.t_max_s))
+    # service times are priced by the service model, not heartbeats;
+    # only explicit "silent" failure injection should trip the monitor
+    heartbeat_s = (30.0 if any(f.kind == "silent" for f in sc.failures)
+                   else sc.t_max_s)
+    wan_shaper = WanShaper(bandwidth_bps=bw_bps, rtt_s=rtt, sleep=False)
+    if sc.placement == "fog":
+        fog = mgr.submit_pilot(ComputeResource(
+            tier="fog", n_workers=sc.n_fog or sc.n_devices))
+        metro = sc.cost_model.profile.link("edge", "fog")
+        reduced = _reduced_payload(sc)
+        pipe = ContinuumPipeline(
+            stages=[
+                StageSpec("produce", lambda ctx: payload,
+                          pilot=edge, n_tasks=sc.n_devices),
+                StageSpec("process_fog",
+                          lambda ctx, data=None: reduced, pilot=fog,
+                          n_tasks=sc.n_fog or sc.n_devices),
+                StageSpec("process_cloud",
+                          lambda ctx, data=None: None, pilot=cloud,
+                          n_tasks=n_cons),
+            ],
+            n_partitions=sc.n_devices, topic_name="e2c",
+            shapers=[WanShaper(bandwidth_bps=metro.bandwidth_bps,
+                               rtt_s=metro.latency_s, sleep=False),
+                     wan_shaper],
+            metrics=metrics, clock=clock,
+            speculative_factor=sc.speculative_factor,
+            heartbeat_timeout_s=heartbeat_s)
+    else:
+        pipe = EdgeToCloudPipeline(
+            pilot_cloud_processing=cloud, pilot_edge=edge,
+            produce_function_handler=lambda ctx: payload,
+            process_cloud_function_handler=lambda ctx, data=None: None,
+            n_edge_devices=sc.n_devices, n_partitions=sc.n_devices,
+            cloud_consumers=n_cons, topic_name="e2c",
+            wan_shaper=wan_shaper,
+            metrics=metrics, clock=clock,
+            speculative_factor=sc.speculative_factor,
+            heartbeat_timeout_s=heartbeat_s)
     scaler = None
     if sc.autoscale is not None:
         scaler = AutoScaler(mgr, cloud, lag_fn=pipe.current_lag,
@@ -374,9 +438,12 @@ def run_scenario(sc: Scenario) -> ScenarioResult:
     def pct(q):
         return lat[min(len(lat) - 1, int(q * len(lat)))] if lat else 0.0
 
-    wan_bytes = metrics.counter(f"topic.{pipe._topic.name}.bytes_in")
+    # the hop that enters the cloud tier is the WAN crossing in every
+    # placement (fog's first hop is the metro link, not WAN)
+    wan_bytes = metrics.counter(f"topic.{pipe._topics[-1].name}.bytes_in")
     return ScenarioResult(
         scenario=sc,
+        tiers=tuple(pipe.stage_tiers),
         n_processed=n_done,
         n_duplicates=int(metrics.counter("pipeline.duplicates_dropped")),
         makespan_s=makespan,

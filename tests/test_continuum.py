@@ -1,0 +1,255 @@
+"""N-tier ContinuumPipeline: a 4-tier device/edge/fog/cloud scenario end
+to end under both execution strategies, per-stage tier vectors through
+the fog scenarios and the advisor, the fog-pilot pricing regression, and
+auto placement of unbound stages."""
+import numpy as np
+import pytest
+
+from repro.core import (ComputeResource, ContinuumPipeline,
+                        EdgeToCloudPipeline, MetricsRegistry, PilotManager,
+                        PlacementEngine, SimClock, SimExecutor, StageSpec,
+                        ThreadedExecutor)
+from repro.cost import DEFAULT_PROFILE
+from repro.cost.advisor import PlacementAdvisor
+from repro.sim.scenarios import (KMEANS, PLACEMENTS, Scenario,
+                                 build_pipeline, run_scenario)
+
+
+def _four_tier(clock=None, n=2):
+    """A genuine 4-stage device→edge→fog→cloud pipeline: sense → halve →
+    halve → sum, with the hops auto-shaped from the routed topology."""
+    metrics = MetricsRegistry(clock=clock) if clock else None
+    mgr = PilotManager(devices=(), clock=clock)
+    stages = [
+        StageSpec("sense",
+                  lambda ctx: np.arange(128, dtype=np.float64),
+                  pilot=mgr.submit_pilot(ComputeResource(tier="device",
+                                                         n_workers=n))),
+        StageSpec("edge_agg", lambda ctx, data=None: data[::2],
+                  pilot=mgr.submit_pilot(ComputeResource(tier="edge",
+                                                         n_workers=n))),
+        StageSpec("fog_agg", lambda ctx, data=None: data[::2],
+                  pilot=mgr.submit_pilot(ComputeResource(tier="fog",
+                                                         n_workers=n))),
+        StageSpec("process_cloud",
+                  lambda ctx, data=None: float(np.sum(data)),
+                  pilot=mgr.submit_pilot(ComputeResource(tier="cloud",
+                                                         n_workers=n))),
+    ]
+    return ContinuumPipeline(stages=stages, metrics=metrics, clock=clock)
+
+
+EXPECTED = float(np.sum(np.arange(128.0)[::2][::2]))
+
+
+# ---------------------------------------------------------------------------
+# the acceptance gate: 4 tiers under both strategies
+# ---------------------------------------------------------------------------
+
+def test_four_tier_pipeline_under_sim_executor():
+    clock = SimClock()
+    pipe = _four_tier(clock)
+    assert pipe.stage_tiers == ["device", "edge", "fog", "cloud"]
+    res = pipe.run(n_messages=12, timeout_s=600.0,
+                   scheduler=SimExecutor(clock=clock))
+    assert res.n_processed == 12 and res.n_produced == 12
+    assert res.results == [EXPECTED] * 12
+    # every hop between distinct tiers is shaped by its routed link, so
+    # end-to-end latency covers at least the accumulated one-way latency
+    route_latency = sum(
+        DEFAULT_PROFILE.route(a, b).latency_s
+        for a, b in zip(pipe.stage_tiers[:-1], pipe.stage_tiers[1:]))
+    lat = res.metrics.latencies("produced", "processed")
+    assert len(lat) == 12
+    assert min(lat) >= route_latency / 2.0     # shaper charges rtt/2 one-way
+    assert res.wall_s > 0.0
+
+
+def test_four_tier_pipeline_under_threaded_executor():
+    pipe = _four_tier()
+    res = pipe.run(n_messages=12, timeout_s=60.0,
+                   scheduler=ThreadedExecutor())
+    assert res.n_processed == 12
+    assert res.results == [EXPECTED] * 12
+    assert res.metrics.summary()["count"] == 12
+
+
+def test_four_tier_bit_identical_across_three_runs():
+    def one():
+        clock = SimClock()
+        pipe = _four_tier(clock)
+        svc = lambda stage, ctx, data: {"sense": 0.01, "edge_agg": 0.02,
+                                        "fog_agg": 0.03,
+                                        "process_cloud": 0.05}[stage]
+        res = pipe.run(n_messages=16, timeout_s=600.0,
+                       scheduler=SimExecutor(clock=clock,
+                                             service_model=svc))
+        lat = res.metrics.latencies("produced", "processed")
+        return (res.n_processed, res.wall_s, tuple(sorted(lat)))
+
+    a, b, c = one(), one(), one()
+    assert a == b == c
+    assert a[0] == 16
+
+
+def test_intermediate_stage_hot_swap_and_errors():
+    """replace_function reaches intermediate stages; unknown stages and
+    stage-name collisions fail loudly."""
+    clock = SimClock()
+    pipe = _four_tier(clock)
+    pipe.replace_function("fog_agg", lambda ctx, data=None: data[:4])
+    res = pipe.run(n_messages=6, timeout_s=600.0,
+                   scheduler=SimExecutor(clock=clock))
+    assert res.results == [float(np.sum(np.arange(128.0)[::2][:4]))] * 6
+    with pytest.raises(KeyError):
+        pipe.replace_function("no-such-stage", lambda ctx: None)
+    mgr = PilotManager(devices=())
+    p = mgr.submit_pilot(ComputeResource(tier="edge", n_workers=1))
+    with pytest.raises(ValueError, match="unique"):
+        ContinuumPipeline(stages=[
+            StageSpec("a", lambda ctx: None, pilot=p),
+            StageSpec("a", lambda ctx, data=None: None, pilot=p)])
+    # "consumer" is the final stage's cid namespace (crash injection /
+    # autoscaling address it) — reserved for intermediate stages
+    with pytest.raises(ValueError, match="reserved"):
+        ContinuumPipeline(stages=[
+            StageSpec("a", lambda ctx: None, pilot=p),
+            StageSpec("consumer", lambda ctx, data=None: None, pilot=p),
+            StageSpec("b", lambda ctx, data=None: None, pilot=p)])
+    with pytest.raises(ValueError, match="source"):
+        ContinuumPipeline(stages=[StageSpec("only", lambda ctx: None,
+                                            pilot=p)])
+
+
+def test_edge_to_cloud_is_a_thin_continuum_wrapper():
+    """The legacy pipeline is literally a two-stage ContinuumPipeline —
+    same bodies, same state machinery, legacy attribute surface intact."""
+    mgr = PilotManager(devices=())
+    edge = mgr.submit_pilot(ComputeResource(tier="edge", n_workers=3))
+    cloud = mgr.submit_pilot(ComputeResource(tier="cloud", n_workers=2))
+    pipe = EdgeToCloudPipeline(
+        pilot_cloud_processing=cloud, pilot_edge=edge,
+        produce_function_handler=lambda ctx: np.zeros(8),
+        process_cloud_function_handler=lambda ctx, data=None: 1.0)
+    assert isinstance(pipe, ContinuumPipeline)
+    assert [s.name for s in pipe.stages] == ["produce", "process_cloud"]
+    assert pipe.stage_tiers == ["edge", "cloud"]
+    assert pipe.n_edge_devices == 3 and pipe.cloud_consumers == 3
+    assert pipe.pilot_cloud is pipe.stages[-1].pilot
+
+
+def test_auto_placement_binds_stage_through_engine():
+    """A ``placement='auto'`` stage is bound by scoring the candidates —
+    the heavy workload lands on the cloud pilot, and with no candidates
+    construction fails loudly."""
+    mgr = PilotManager(devices=())
+    edge = mgr.submit_pilot(ComputeResource(tier="edge", n_workers=2))
+    cloud = mgr.submit_pilot(ComputeResource(tier="cloud", n_workers=2))
+    stages = [
+        StageSpec("produce", lambda ctx: np.zeros(8), pilot=edge),
+        StageSpec("train", lambda ctx, data=None: 0.0, placement="auto"),
+    ]
+    pipe = ContinuumPipeline(
+        stages=stages, function_context={"task_flops": 1e12},
+        candidate_pilots={"train": [edge, cloud]})
+    assert pipe.stages[-1].pilot is cloud
+    with pytest.raises(ValueError, match="candidate"):
+        ContinuumPipeline(stages=stages)
+
+
+# ---------------------------------------------------------------------------
+# fog-pilot pricing regression (satellite)
+# ---------------------------------------------------------------------------
+
+def test_fog_pilot_priced_at_fog_rate_not_cloud():
+    """Regression: ``PlacementEngine.pilot_flops`` used to price every
+    non-edge pilot at the cloud device rate; a fog pilot must price at
+    the fog tier's own device rate."""
+    mgr = PilotManager(devices=())
+    fog = mgr.submit_pilot(ComputeResource(tier="fog", n_workers=3))
+    cloud = mgr.submit_pilot(ComputeResource(tier="cloud", n_workers=3))
+    device = mgr.submit_pilot(ComputeResource(tier="device", n_workers=3))
+    eng = PlacementEngine()
+    fog_rate = DEFAULT_PROFILE.tier("fog").device.peak_flops
+    cloud_rate = DEFAULT_PROFILE.tier("cloud").device.peak_flops
+    assert eng.pilot_flops(fog) == pytest.approx(3 * fog_rate)
+    assert eng.pilot_flops(cloud) == pytest.approx(3 * cloud_rate)
+    assert eng.pilot_flops(fog) < eng.pilot_flops(cloud)
+    assert eng.pilot_flops(device) == pytest.approx(
+        3 * DEFAULT_PROFILE.tier("device").device.peak_flops)
+    # …and the estimate's compute term follows the corrected rate
+    from repro.core.placement import TaskProfile
+    t = TaskProfile(flops=1e9, input_bytes=0.0)
+    assert eng.estimate(t, fog).breakdown["t_compute"] == pytest.approx(
+        1e9 / (3 * fog_rate))
+    # a tier the profile doesn't model prices at the *slowest* known
+    # rate — a fast guess would bias auto-placement onto unmodeled tiers
+    mystery = mgr.submit_pilot(ComputeResource(tier="edge-site-2",
+                                               n_workers=1))
+    slowest = min(tp.device.peak_flops
+                  for tp in DEFAULT_PROFILE.tiers.values())
+    assert eng.pilot_flops(mystery) == pytest.approx(slowest)
+
+
+# ---------------------------------------------------------------------------
+# fog scenarios + advisor tier vectors
+# ---------------------------------------------------------------------------
+
+def test_fog_scenario_runs_a_three_stage_pipeline():
+    sc = Scenario(model=KMEANS, placement="fog", wan_band="10mbit",
+                  n_messages=16)
+    pipe, ex, _ = build_pipeline(sc)
+    assert isinstance(pipe, ContinuumPipeline)
+    assert not isinstance(pipe, EdgeToCloudPipeline)
+    assert [s.name for s in pipe.stages] == \
+        ["produce", "process_fog", "process_cloud"]
+    res = pipe.run(n_messages=16, timeout_s=3600.0, scheduler=ex)
+    assert res.n_processed == 16
+    # two hops → two topics; only the fog→cloud hop carries WAN bytes
+    assert len(pipe._topics) == 2
+
+
+def test_fog_scenario_sits_between_hybrid_and_cloud():
+    """On the constrained WAN the fog placement sends only the reduced
+    message over the WAN (like hybrid) but pays the extra metro hop —
+    far faster than cloud, WAN-thin, a bit behind hybrid."""
+    rows = {p: run_scenario(Scenario(model=KMEANS, placement=p,
+                                     wan_band="10mbit", n_messages=24))
+            for p in ("cloud", "hybrid", "fog")}
+    assert rows["fog"].throughput_msgs_s > 5 * rows["cloud"].throughput_msgs_s
+    assert rows["fog"].wan_bytes == rows["hybrid"].wan_bytes
+    assert rows["fog"].throughput_msgs_s < rows["hybrid"].throughput_msgs_s
+    assert rows["fog"].row()["tiers"] == ["edge", "fog", "cloud"]
+    assert rows["hybrid"].row()["tiers"] == ["edge", "cloud"]
+
+
+def test_fog_scenario_bit_identical_with_noise_and_speculation():
+    sc = Scenario(model=KMEANS, placement="fog", wan_band="10mbit",
+                  n_messages=24, service_sigma=None,
+                  speculative_factor=1.2)
+    rows = [run_scenario(sc).row() for _ in range(3)]
+    assert rows[0] == rows[1] == rows[2]
+    assert rows[0]["processed"] == 24
+
+
+def test_advisor_three_stage_sweep_with_tier_vectors():
+    """Acceptance pin: the advisor ranks the ≥3-stage placement sweep —
+    fog cells carry the (edge, fog, cloud) tier vector — bit-identically
+    across three runs."""
+    assert "fog" in PLACEMENTS
+    reports = [PlacementAdvisor(n_messages=16).advise("kmeans")
+               for _ in range(3)]
+    rows = [r.rows() for r in reports]
+    assert rows[0] == rows[1] == rows[2]
+    fog_cells = [c for c in reports[0].cells if c.placement == "fog"]
+    assert fog_cells and all(c.tiers == ("edge", "fog", "cloud")
+                             for c in fog_cells)
+    assert all(len(c.tiers) >= 3 for c in fog_cells)
+    two_stage = [c for c in reports[0].cells if c.placement != "fog"]
+    assert all(c.tiers == ("edge", "cloud") for c in two_stage)
+    # the fog column shows up in the human table
+    assert "e-f-c" in reports[0].table()
+    # at 10 Mbit/s the WAN-thin placements (edge/hybrid/fog) all beat
+    # shipping raw points to the cloud
+    ranking = reports[0].ranking("10mbit")
+    assert ranking[-1].placement == "cloud"

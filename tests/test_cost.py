@@ -248,13 +248,18 @@ def test_advisor_bit_identical_across_three_runs():
     rows = [PlacementAdvisor(n_messages=24).advise("kmeans").rows()
             for _ in range(3)]
     assert rows[0] == rows[1] == rows[2]
-    # ranked rows: rank 1..n per band, exactly one recommendation
+    # ranked rows: rank 1..n per band over the full tier set (the fog
+    # cell is a genuine 3-stage pipeline), exactly one recommendation
     by_band = {}
     for r in rows[0]:
         by_band.setdefault(r["wan"], []).append(r)
     for band_rows in by_band.values():
-        assert [r["rank"] for r in band_rows] == [1, 2, 3]
+        assert [r["rank"] for r in band_rows] == [1, 2, 3, 4]
         assert sum(r["recommended"] for r in band_rows) == 1
+    # every cell is tier-vector-stamped; the ≥3-stage fog sweep rides it
+    tiers = {r["placement"]: r["tiers"] for r in rows[0]}
+    assert tiers["fog"] == ["edge", "fog", "cloud"]
+    assert tiers["cloud"] == ["edge", "cloud"]
 
 
 def test_pipeline_run_placement_advise():
@@ -275,7 +280,8 @@ def test_pipeline_run_placement_advise():
     assert rep.best("10mbit").placement in ("edge", "hybrid")
     assert "recommended" in rep.table()
     # rows/table keep ascending-bandwidth band order, not lexicographic
-    assert [r["wan"] for r in rep.rows()[::3]] == \
+    # (4 placements per band: edge/cloud/hybrid/fog)
+    assert [r["wan"] for r in rep.rows()[::4]] == \
         ["10mbit", "50mbit", "100mbit"]
     with pytest.raises(ValueError):
         pipe.run(n_messages=4, placement="bogus")
@@ -341,7 +347,7 @@ def test_advisor_multi_objective_columns_and_latency_budget():
     assert not cloud.feasible
     assert rep.ranking("10mbit")[-1] is cloud
     # budget filtering never *drops* cells: full grid still reported
-    assert len(rep.ranking("10mbit")) == 3
+    assert len(rep.ranking("10mbit")) == 4
 
 
 def test_advisor_infeasible_budget_is_ranked_but_flagged():
@@ -356,7 +362,7 @@ def test_advisor_infeasible_budget_is_ranked_but_flagged():
     assert best.placement == "edge"           # still the right direction
     assert not best.feasible                  # …but honestly flagged
     rows = rep.rows()
-    assert len(rows) == 9
+    assert len(rows) == 12
     assert all(r["feasible"] is False for r in rows)
     assert sum(r["recommended"] for r in rows) == 3   # one per band
     assert "[over budget]" in rep.table()
@@ -389,9 +395,16 @@ def test_advisor_sweeps_hybrid_reduce_per_band():
         by_red = {c.hybrid_reduce: c for c in hybrids}
         assert (by_red[20].wan_bytes < by_red[10].wan_bytes
                 < by_red[5].wan_bytes)
-        # non-hybrid cells don't carry a reduce factor
+        # the fog placement pre-aggregates too (on the fog tier), so the
+        # sweep applies there as well — same factors, same monotonicity
+        fogs = {c.hybrid_reduce: c for c in rep.ranking(band)
+                if c.placement == "fog"}
+        assert sorted(fogs) == [5, 10, 20]
+        assert (fogs[20].wan_bytes < fogs[10].wan_bytes
+                < fogs[5].wan_bytes)
+        # edge/cloud cells don't carry a reduce factor
         assert all(c.hybrid_reduce is None for c in rep.ranking(band)
-                   if c.placement != "hybrid")
+                   if c.placement not in ("hybrid", "fog"))
     # rows stay schema-shaped and deterministic under the sweep
     again = PlacementAdvisor(n_messages=16).advise(
         "kmeans", hybrid_reduce=(5, 10, 20))
@@ -504,6 +517,33 @@ def test_live_roofline_calibration_matches_committed():
 
 
 @pytest.mark.slow
+def test_calibration_drift_report_refits_live():
+    """The calibration-drift lane's engine: a live refit of
+    efficiency/sigma paired against the committed calibration — the
+    achieved-fraction-of-peak numbers CI uploads as an artifact.  The
+    kernel flops must agree with the committed roofline measurement (the
+    deterministic half); the service fit is host-dependent and only needs
+    to be a sane fraction of peak."""
+    tool = _load_tool("calibration_drift")
+    report = tool.drift_report(models=["kmeans"], n_messages=2)
+    assert report["meta"]["n_messages"] == 2
+    (row,) = report["models"]
+    assert row["model"] == "kmeans"
+    # same band as the CI gate below — the two lanes must agree on what
+    # counts as kernel drift
+    assert 0.5 <= row["kernel_flops_ratio"] <= 2.0
+    # host-dependent by design: only sanity, never a band (the CI lane
+    # deliberately refuses to gate the live service fit)
+    assert row["achieved_fraction_of_peak"] > 0.0
+    assert row["committed_efficiency"] == \
+        load_calibration()["kmeans"].efficiency
+    assert row["sigma"] >= 0.0
+    # the CLI wrapper round-trips and honors the kernel-drift gate
+    assert tool.main(["--models", "kmeans", "--messages", "2",
+                      "--max-kernel-drift", "2.0"]) == 0
+
+
+@pytest.mark.slow
 def test_threaded_paced_throughput_matches_sim_prediction():
     """The satellite's parity gate: the same pipeline paced by the same
     calibrated service model must deliver comparable throughput on real
@@ -556,7 +596,9 @@ def test_threaded_and_sim_speculation_agree_on_who_wins():
     (event-scheduled backup races).  At the calibrated k-means sigma,
     stragglers barely overshoot the threshold, so the primary wins
     almost every race: losses strictly dominate wins in both worlds
-    (exact counts differ — thread interleaving reorders the rng draws)."""
+    (exact counts differ — thread interleaving reorders the rng draws).
+    The surplus consumers (4 over 2 partitions) are the idle capacity
+    the capacity-aware backups steal in both worlds."""
     from repro.core import (EdgeToCloudPipeline, MetricsRegistry, SimClock,
                             SimExecutor, ThreadedExecutor)
 
@@ -565,13 +607,13 @@ def test_threaded_and_sim_speculation_agree_on_who_wins():
         mgr = PilotManager(devices=(), clock=clock)
         edge = mgr.submit_pilot(ComputeResource(tier="edge", n_workers=2))
         cloud = mgr.submit_pilot(ComputeResource(tier="cloud",
-                                                 n_workers=2))
+                                                 n_workers=4))
         payload = np.arange(64, dtype=np.float64)
         return EdgeToCloudPipeline(
             pilot_cloud_processing=cloud, pilot_edge=edge,
             produce_function_handler=lambda ctx: payload,
             process_cloud_function_handler=lambda ctx, data=None: 0.0,
-            n_edge_devices=2, cloud_consumers=2,
+            n_edge_devices=2, cloud_consumers=4,
             metrics=metrics, clock=clock)
 
     def make_service():

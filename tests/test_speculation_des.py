@@ -2,7 +2,13 @@
 ``TaskRuntime.speculative_factor`` under virtual time — a Service charge
 running past ``factor × trailing median`` spawns a backup draw racing the
 primary as scheduled events, first completion wins, with explicit
-win/loss/cancel accounting that is bit-identical across runs."""
+win/loss/cancel accounting that is bit-identical across runs.
+
+Speculation is capacity-aware (Dask-style work stealing): the backup
+occupies a *different, idle* consumer slot of the same stage — the stolen
+stage-mate stops taking new messages until the race resolves, and when no
+stage-mate is idle the backup is skipped
+(``runtime.speculative_no_capacity``)."""
 import dataclasses
 
 import numpy as np
@@ -42,13 +48,18 @@ def test_speculation_accounting_bit_identical_across_three_runs():
 def test_speculation_win_loss_golden_counts():
     """Numeric pins (pure virtual-time arithmetic — machine-independent):
     the calibrated k-means sigma at factor 1.2, and the heavy-tailed
-    variant where backups genuinely win races."""
+    variant where backups genuinely win races.  Capacity-aware work
+    stealing launches fewer backups than the historical same-slot race
+    (producers never idle, so ``produce`` charges no longer speculate,
+    and a busy stage skips the launch): the skips are accounted in
+    ``runtime.speculative_no_capacity``."""
     r = run_scenario(_spec_scenario(1.2))
-    assert (r.spec_launches, r.spec_wins, r.spec_losses) == (25, 0, 25)
+    assert (r.spec_launches, r.spec_wins, r.spec_losses) == (11, 0, 11)
+    assert r.metrics.counter("runtime.speculative_no_capacity") > 0
     h = run_scenario(_spec_scenario(1.2, sigma=None, model=HEAVY,
                                     n_messages=64))
     assert h.spec_launches > 0 and h.spec_wins > 0 and h.spec_losses > 0
-    assert (h.spec_launches, h.spec_wins, h.spec_losses) == (51, 23, 28)
+    assert (h.spec_launches, h.spec_wins, h.spec_losses) == (24, 10, 14)
 
 
 def test_no_noise_means_no_speculation():
@@ -120,12 +131,14 @@ def test_speculation_shortens_heavy_tail_makespan():
     under heavy-tailed service noise, first-completion-wins cuts the
     straggler tail — virtual makespan with speculation < without, at
     every seed (k-means cloud cells are WAN-bound: sub-millisecond
-    compute charges give speculation nothing to win)."""
+    compute charges give speculation nothing to win).  The surplus
+    consumers (4 consumers over 2 partitions) are the idle capacity the
+    work-stealing backups run on."""
     from repro.sim.scenarios import AUTOENCODER
     heavy_ae = dataclasses.replace(AUTOENCODER, sigma=0.8)
     for seed in range(3):
         kw = dict(model=heavy_ae, placement="cloud", wan_band="100mbit",
-                  n_messages=32, n_devices=2, n_consumers=2,
+                  n_messages=32, n_devices=2, n_consumers=4,
                   service_sigma=None, seed=seed)
         slow = run_scenario(Scenario(**kw))
         fast = run_scenario(Scenario(**kw, speculative_factor=1.3))
@@ -155,16 +168,17 @@ def test_speculation_deterministic_under_silent_loss_injection():
 def test_speculation_race_unresolved_at_run_end_counts_cancelled():
     """A backup race still in flight when the run ends resolves as
     *cancelled* — never a phantom win/loss, so the accounting identity
-    survives truncated runs."""
+    survives truncated runs.  The second consumer (no partition of its
+    own) is the idle slot the backup steals."""
     clock = SimClock()
     mgr = PilotManager(devices=(), clock=clock)
     edge = mgr.submit_pilot(ComputeResource(tier="edge", n_workers=1))
-    cloud = mgr.submit_pilot(ComputeResource(tier="cloud", n_workers=1))
+    cloud = mgr.submit_pilot(ComputeResource(tier="cloud", n_workers=2))
     pipe = EdgeToCloudPipeline(
         pilot_cloud_processing=cloud, pilot_edge=edge,
         produce_function_handler=lambda ctx: np.zeros(8),
         process_cloud_function_handler=lambda ctx, data=None: None,
-        n_edge_devices=1, cloud_consumers=1,
+        n_edge_devices=1, cloud_consumers=2,
         metrics=MetricsRegistry(clock=clock), clock=clock,
         heartbeat_timeout_s=1e9)
     # three 1 s charges warm the median, then a 100 s straggler whose
@@ -207,6 +221,108 @@ def test_threaded_explicit_zero_disables_all_speculation():
     assert res.n_processed == 16
     assert ex.speculation is None
     assert res.metrics.counter("runtime.speculative_launches") == 0
+
+
+# ---------------------------------------------------------------------------
+# capacity-aware work stealing (ROADMAP follow-up)
+# ---------------------------------------------------------------------------
+
+def _steal_pipeline(cloud_workers):
+    """1 partition, ``cloud_workers`` consumers: every consumer beyond
+    the first owns no partition and parks — pure idle steal capacity."""
+    clock = SimClock()
+    mgr = PilotManager(devices=(), clock=clock)
+    edge = mgr.submit_pilot(ComputeResource(tier="edge", n_workers=1))
+    cloud = mgr.submit_pilot(ComputeResource(tier="cloud",
+                                             n_workers=cloud_workers))
+    pipe = EdgeToCloudPipeline(
+        pilot_cloud_processing=cloud, pilot_edge=edge,
+        produce_function_handler=lambda ctx: np.zeros(8),
+        process_cloud_function_handler=lambda ctx, data=None: None,
+        n_edge_devices=1, cloud_consumers=cloud_workers,
+        metrics=MetricsRegistry(clock=clock), clock=clock,
+        heartbeat_timeout_s=1e9)
+    return pipe, clock
+
+
+def test_backup_steals_idle_slot_and_wins():
+    """With an idle stage-mate, the straggler's backup runs on the stolen
+    slot and (drawing a short service time) wins the race — the
+    effective charge is threshold + backup, far under the straggler."""
+    pipe, clock = _steal_pipeline(cloud_workers=2)
+    charges = iter([1.0, 1.0, 1.0, 100.0, 1.0])   # straggler, then backup
+
+    def service(stage, ctx, payload):
+        return next(charges) if stage == "process_cloud" else 0.0
+
+    ex = SimExecutor(clock=clock, service_model=service,
+                     speculative_factor=1.5)
+    res = pipe.run(n_messages=4, timeout_s=600.0, scheduler=ex)
+    assert res.n_processed == 4
+    m = res.metrics
+    assert m.counter("runtime.speculative_launches") == 1
+    assert m.counter("runtime.speculative_wins") == 1
+    assert m.counter("runtime.speculative_no_capacity") == 0
+    # threshold (1.5 × 1 s) + backup (1 s) ≈ 2.5 s, not the 100 s draw
+    assert res.wall_s < 10.0
+
+
+def test_no_idle_slot_means_no_backup():
+    """Same straggler with a single consumer: there is no other slot to
+    steal, so the backup is skipped (counted in
+    ``runtime.speculative_no_capacity``) and the straggler runs out."""
+    pipe, clock = _steal_pipeline(cloud_workers=1)
+    charges = iter([1.0, 1.0, 1.0, 30.0, 1.0])
+
+    def service(stage, ctx, payload):
+        return next(charges) if stage == "process_cloud" else 0.0
+
+    ex = SimExecutor(clock=clock, service_model=service,
+                     speculative_factor=1.5)
+    res = pipe.run(n_messages=4, timeout_s=600.0, scheduler=ex)
+    assert res.n_processed == 4
+    m = res.metrics
+    assert m.counter("runtime.speculative_launches") == 0
+    assert m.counter("runtime.speculative_no_capacity") == 1
+    assert res.wall_s > 30.0                  # the straggler ran its course
+
+
+def test_stolen_helper_stops_polling_until_race_resolves():
+    """Work stealing means the backup *occupies* the helper slot: while
+    the race runs, the lent consumer must not take new messages — with 2
+    partitions and 2 consumers, stealing consumer-1 leaves its partition
+    untouched until release, and everything still completes."""
+    clock = SimClock()
+    mgr = PilotManager(devices=(), clock=clock)
+    edge = mgr.submit_pilot(ComputeResource(tier="edge", n_workers=2))
+    cloud = mgr.submit_pilot(ComputeResource(tier="cloud", n_workers=2))
+    pipe = EdgeToCloudPipeline(
+        pilot_cloud_processing=cloud, pilot_edge=edge,
+        produce_function_handler=lambda ctx: np.zeros(8),
+        process_cloud_function_handler=lambda ctx, data=None: None,
+        n_edge_devices=2, cloud_consumers=2,
+        metrics=MetricsRegistry(clock=clock), clock=clock,
+        heartbeat_timeout_s=1e9)
+    # producers are staggered so consumer-1 idles when the straggler hits
+    svc = {"n": 0}
+
+    def service(stage, ctx, payload):
+        if stage != "process_cloud":
+            return 0.0
+        svc["n"] += 1
+        return 20.0 if svc["n"] == 4 else 0.5
+
+    ex = SimExecutor(clock=clock, service_model=service,
+                     speculative_factor=1.5,
+                     producer_offsets=(0.0, 30.0))
+    res = pipe.run(n_messages=12, timeout_s=600.0, scheduler=ex)
+    assert res.n_processed == 12              # nothing lost to the lend
+    m = res.metrics
+    launches = m.counter("runtime.speculative_launches")
+    assert launches >= 1
+    assert (m.counter("runtime.speculative_wins")
+            + m.counter("runtime.speculative_losses")
+            + m.counter("runtime.speculative_cancelled") == launches)
 
 
 # ---------------------------------------------------------------------------

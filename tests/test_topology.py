@@ -1,0 +1,154 @@
+"""Continuum topology: multi-hop routing over the tier graph — triangle
+optimality (a detour never beats a direct link), per-hop latency
+accumulation, routed transfer pricing in the CostModel, and the
+``DEFAULT_LINKS``/``WAN_BANDS`` equality pins over the default 4-tier
+device/edge/fog/cloud instance."""
+import dataclasses
+
+import pytest
+
+from repro.core.placement import DEFAULT_LINKS
+from repro.cost import CostModel
+from repro.cost.profiles import (DEFAULT_PROFILE, DEVICE_EDGE_LINK,
+                                 EDGE_FOG_LINK, WAN_BANDS, LinkModel,
+                                 Route, Topology)
+
+
+# ---------------------------------------------------------------------------
+# routing over the default 4-tier instance
+# ---------------------------------------------------------------------------
+
+def test_default_profile_is_four_tier_continuum():
+    tiers = set(DEFAULT_PROFILE.tiers)
+    assert {"device", "edge", "fog", "cloud"} <= tiers
+    # per-tier device rates are strictly ordered along the continuum
+    rates = [DEFAULT_PROFILE.tier(t).device.peak_flops
+             for t in ("device", "edge", "fog", "cloud")]
+    assert rates == sorted(rates)
+    assert len(set(rates)) == 4
+
+
+def test_triangle_direct_link_is_never_beaten_by_fog_detour():
+    """Satellite pin: route(edge→cloud) must take the direct WAN link —
+    the edge→fog→cloud detour pays the metro hop *plus* the same WAN
+    crossing, so it cannot be faster at any message size."""
+    topo = DEFAULT_PROFILE.topology
+    for nbytes in (0.0, 1e3, 1.25e6, 1e9):
+        r = topo.route("edge", "cloud", nbytes)
+        assert r.tiers == ("edge", "cloud")
+        detour_s = (EDGE_FOG_LINK.latency_s + nbytes / EDGE_FOG_LINK.bandwidth
+                    + r.transfer_s(nbytes))
+        assert r.transfer_s(nbytes) <= detour_s
+
+
+def test_multi_hop_route_accumulates_per_hop_latency():
+    """device→cloud has no direct link: the route rides device→edge→cloud
+    and its latency/transfer cost is the *sum* over hops, not the max."""
+    r = DEFAULT_PROFILE.route("device", "cloud")
+    assert r.tiers == ("device", "edge", "cloud")
+    wan = DEFAULT_PROFILE.link("edge", "cloud")
+    assert r.latency_s == pytest.approx(
+        DEVICE_EDGE_LINK.latency_s + wan.latency_s)
+    nbytes = 1e6
+    assert r.transfer_s(nbytes) == pytest.approx(
+        nbytes / DEVICE_EDGE_LINK.bandwidth + DEVICE_EDGE_LINK.latency_s
+        + nbytes / wan.bandwidth + wan.latency_s)
+
+
+def test_route_as_link_is_store_and_forward_equivalent():
+    """The serialized-equivalent single link (harmonic bandwidth +
+    accumulated latency) prices identically to the per-hop sum for any
+    message size."""
+    r = DEFAULT_PROFILE.route("device", "cloud")
+    eff = r.as_link()
+    for nbytes in (1.0, 1e4, 1e7):
+        assert (nbytes / eff.bandwidth + eff.latency_s
+                == pytest.approx(r.transfer_s(nbytes)))
+    # harmonic: the effective bandwidth is below every hop's
+    assert eff.bandwidth < min(h.link.bandwidth for h in r.hops)
+
+
+def test_cost_model_transfer_prices_routed_paths():
+    cm = CostModel()
+    # the historical direct-link pin still holds (10 Mbit/s + 150 ms)
+    assert cm.transfer_s(1.25e6, "edge", "cloud") == pytest.approx(1.150)
+    # device→cloud pays both hops
+    direct = cm.transfer_s(1.25e6, "edge", "cloud")
+    local = cm.transfer_s(1.25e6, "device", "edge")
+    assert cm.transfer_s(1.25e6, "device", "cloud") == pytest.approx(
+        direct + local)
+    assert cm.route("device", "cloud").tiers == ("device", "edge", "cloud")
+
+
+def test_routing_is_deterministic_and_same_tier_is_intra():
+    topo = DEFAULT_PROFILE.topology
+    routes = [topo.route("device", "hpc", 1e6).tiers for _ in range(5)]
+    assert len(set(routes)) == 1
+    r = DEFAULT_PROFILE.route("cloud", "cloud")
+    assert r.transfer_s(1e6) == pytest.approx(1e6 / 10e9)
+
+
+def test_disconnected_tiers_fall_back_to_default_wan():
+    """A profile whose topology cannot connect two tiers prices the pair
+    at the legacy fallback (default WAN band, doubled latency) instead of
+    dead-ending."""
+    island = Topology({("a", "b"): LinkModel(1e6, 0.01)}, tiers=("a", "b",
+                                                                 "c"))
+    assert island.route("a", "c") is None
+    r = DEFAULT_PROFILE.route("edge", "nowhere")
+    assert len(r.hops) == 1
+    wan = DEFAULT_PROFILE.wan()
+    assert r.hops[0].link.bandwidth == wan.bandwidth
+    assert r.hops[0].link.latency_s == pytest.approx(2 * wan.latency_s)
+
+
+def test_route_object_shape():
+    r = DEFAULT_PROFILE.route("device", "cloud")
+    assert isinstance(r, Route)
+    assert [h.src for h in r.hops] == ["device", "edge"]
+    assert [h.dst for h in r.hops] == ["edge", "cloud"]
+    empty = DEFAULT_PROFILE.topology.route("edge", "edge")
+    assert empty.hops == () and empty.transfer_s(1e9) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# the shared-table pins survive the topology refactor
+# ---------------------------------------------------------------------------
+
+def test_default_links_and_wan_bands_pins_still_hold():
+    """``DEFAULT_LINKS`` / ``WAN_BANDS`` are views of the default 4-tier
+    instance: the historical equality pins survive the refactor, and the
+    new fog→cloud edge carries the same constrained WAN band."""
+    assert DEFAULT_LINKS[("edge", "cloud")] == WAN_BANDS["10mbit"]
+    assert DEFAULT_LINKS[("edge", "hpc")] == WAN_BANDS["10mbit"]
+    assert DEFAULT_LINKS[("fog", "cloud")] == WAN_BANDS["10mbit"]
+    assert DEFAULT_LINKS[("device", "edge")] == DEVICE_EDGE_LINK
+    assert DEFAULT_LINKS[("edge", "fog")] == EDGE_FOG_LINK
+    assert DEFAULT_LINKS == dict(DEFAULT_PROFILE.links)
+    # the non-WAN continuum links never collide with a WAN band price
+    # (``with_wan`` re-pricing matches on link equality)
+    bands = set(WAN_BANDS.values())
+    assert DEVICE_EDGE_LINK not in bands
+    assert EDGE_FOG_LINK not in bands
+
+
+def test_with_wan_reprices_wan_edges_only():
+    fast = DEFAULT_PROFILE.with_wan("100mbit")
+    assert fast.link("fog", "cloud") == WAN_BANDS["100mbit"]
+    assert fast.link("edge", "cloud") == WAN_BANDS["100mbit"]
+    assert fast.link("edge", "fog") == EDGE_FOG_LINK       # metro untouched
+    assert fast.link("device", "edge") == DEVICE_EDGE_LINK
+
+
+def test_custom_topology_is_a_profile_change():
+    """The refactor's promise: a new topology (second edge site with a
+    private fat path to fog) is a one-line profile change — routing picks
+    the new path up without any pipeline code."""
+    site2 = LinkModel(bandwidth=1e9, latency_s=0.001)
+    custom = dataclasses.replace(
+        DEFAULT_PROFILE,
+        links={**DEFAULT_PROFILE.links, ("edge2", "fog"): site2})
+    r = custom.route("edge2", "cloud", 1e6)
+    assert r.tiers == ("edge2", "fog", "cloud")
+    assert r.latency_s == pytest.approx(
+        site2.latency_s + custom.link("fog", "cloud").latency_s)

@@ -3,7 +3,8 @@
 (the CI image has no jsonschema package), supporting the subset the
 benchmarks' schemas use: type (including union lists like
 ["integer", "null"]) / required / properties / additionalProperties /
-enum / minimum / exclusiveMinimum / items.
+enum / minimum / exclusiveMinimum / items / minItems-maxItems (the
+per-stage tier-vector column).
 
 Usage::
 
@@ -58,9 +59,16 @@ def _check(value, schema, path, errors):
         for k, sub in props.items():
             if k in value:
                 _check(value[k], sub, f"{path}.{k}", errors)
-    if isinstance(value, list) and "items" in schema:
-        for i, item in enumerate(value):
-            _check(item, schema["items"], f"{path}[{i}]", errors)
+    if isinstance(value, list):
+        if "minItems" in schema and len(value) < schema["minItems"]:
+            errors.append(f"{path}: {len(value)} item(s) < minItems "
+                          f"{schema['minItems']}")
+        if "maxItems" in schema and len(value) > schema["maxItems"]:
+            errors.append(f"{path}: {len(value)} item(s) > maxItems "
+                          f"{schema['maxItems']}")
+        if "items" in schema:
+            for i, item in enumerate(value):
+                _check(item, schema["items"], f"{path}[{i}]", errors)
 
 
 def main(argv) -> int:
