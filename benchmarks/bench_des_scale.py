@@ -1,0 +1,218 @@
+"""Million-event DES scale benchmark: simulator speed as a perf surface.
+
+Drives the *real* ``EdgeToCloudPipeline`` under ``SimExecutor`` with
+open-loop arrival processes (Poisson / diurnal / flash-crowd) and raw
+``bytes`` payloads, so the measured cost is the event loop itself —
+scheduler heap, actor stepping, broker fan-out, poll/wake — not numpy
+serialization.  The headline cell is a 1M-message, 1000-consumer
+Poisson run; the sweep adds diurnal and flash-crowd cells at a tenth
+the size so every arrival process stays on the tracked surface.
+
+Two kinds of numbers per row:
+
+* **deterministic** (virtual time, event counts, latency percentiles,
+  bytes) — bit-identical for a given seed, gated by
+  ``--check-determinism`` (three full sweeps must agree);
+* **wall-clock** (``wall_s``, ``events_per_s``, ``rss_mb``) — the perf
+  trajectory.  These are excluded from the determinism comparison.
+
+The committed ``BENCH_des_scale.json`` records the pre-rework baseline
+(measured on this machine before the event-loop fixes) next to the
+headline events/s, so the speedup is auditable::
+
+    PYTHONPATH=src python benchmarks/bench_des_scale.py \\
+        --check-determinism --out BENCH_des_scale.json
+
+Row shape is pinned by ``benchmarks/BENCH_des_scale.schema.json``
+(validated in CI by ``tools/check_bench_schema.py``; the file is
+uploaded as the ``BENCH_des_scale`` artifact on every run).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import resource
+import sys
+import time
+
+from repro.core import ComputeResource, EdgeToCloudPipeline, PilotManager
+from repro.core.executor import SimExecutor
+from repro.core.monitoring import MetricsRegistry
+from repro.sim.clock import SimClock
+from repro.sim.scenarios import (DiurnalArrivals, FlashCrowdArrivals,
+                                 PoissonArrivals)
+
+# Pre-rework event-loop throughput, measured on the commit just before
+# the compacting-heap / actor-slot-reuse / waiter-index changes (same
+# machine, same SimExecutor surface).  Kept in the committed JSON so the
+# headline speedup is anchored to a recorded number, not folklore.
+BASELINE = {
+    "events_per_s": 3188.0,
+    "config": ("20000 msgs / 100 devices / 1000 consumers, kmeans cloud "
+               "100mbit closed-loop (pre-rework event loop: O(n) "
+               "cancelled-event sweeps, per-step event allocation, "
+               "O(all-tasks) append scans, per-join wake-all)"),
+}
+
+# row keys compared by --check-determinism (wall-clock keys excluded)
+DETERMINISTIC_KEYS = (
+    "arrival", "messages", "devices", "consumers", "payload_bytes",
+    "seed", "processed", "duplicates", "events", "makespan_s",
+    "lat_p50_s", "lat_p95_s", "wan_bytes",
+)
+
+
+def _arrival(kind: str, rate_hz: float):
+    if kind == "poisson":
+        return PoissonArrivals(rate_hz=rate_hz)
+    if kind == "diurnal":
+        return DiurnalArrivals(base_rate_hz=rate_hz / 4.0,
+                               peak_rate_hz=rate_hz, period_s=20.0)
+    if kind == "flash":
+        return FlashCrowdArrivals(base_rate_hz=rate_hz / 4.0,
+                                  burst_rate_hz=rate_hz * 4.0,
+                                  burst_at_s=2.0, burst_duration_s=2.0)
+    raise ValueError(f"unknown arrival kind {kind!r}")
+
+
+def run_cell(*, arrival: str, messages: int, devices: int, consumers: int,
+             rate_hz: float, payload_bytes: int, service_s: float,
+             seed: int) -> dict:
+    """One open-loop run on the genuine pipeline; returns a bench row."""
+    clock = SimClock()
+    metrics = MetricsRegistry(clock=clock)
+    mgr = PilotManager()
+    edge = mgr.submit_pilot(ComputeResource(tier="edge", n_workers=devices))
+    cloud = mgr.submit_pilot(
+        ComputeResource(tier="cloud", n_workers=consumers))
+    payload = bytes(payload_bytes)   # raw bytes: passthrough serialization
+    pipe = EdgeToCloudPipeline(
+        pilot_cloud_processing=cloud, pilot_edge=edge,
+        produce_function_handler=lambda ctx: payload,
+        process_cloud_function_handler=lambda ctx, data=None: None,
+        n_edge_devices=devices, n_partitions=devices,
+        cloud_consumers=consumers, topic_name="des-scale",
+        metrics=metrics, clock=clock)
+    times = _arrival(arrival, rate_hz).times(messages, seed)
+    plan = [times[i::devices] for i in range(devices)]
+    ex = SimExecutor(
+        clock,
+        service_model=((lambda stage, ctx, data: service_s)
+                       if service_s > 0.0 else None))
+
+    t0 = time.perf_counter()
+    res = pipe.run(timeout_s=float(times[-1]) + 120.0,
+                   collect_results=False, scheduler=ex, arrival_plan=plan)
+    wall = time.perf_counter() - t0
+    mgr.release_all()
+
+    m = res.metrics
+    lat = m.latencies("produced", "processed")
+    lat.sort()
+    n = len(lat)
+    first = m.first_stamp("produced") or 0.0
+    last = m.last_stamp("processed") or first
+    events = ex.sched.executed
+    # ru_maxrss is the process-lifetime high-water mark (KB on Linux):
+    # monotone across cells, so the largest cell owns the reported peak
+    rss_mb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+    return {
+        "arrival": arrival, "messages": messages, "devices": devices,
+        "consumers": consumers, "payload_bytes": payload_bytes,
+        "seed": seed,
+        "processed": res.n_processed,
+        "duplicates": int(m.counter("pipeline.duplicates_dropped")),
+        "events": events,
+        "makespan_s": max(last - first, 1e-9),
+        "lat_p50_s": lat[n // 2] if n else 0.0,
+        "lat_p95_s": lat[min(n - 1, int(0.95 * n))] if n else 0.0,
+        "wan_bytes": m.counter("topic.des-scale.bytes_in"),
+        "wall_s": wall,
+        "events_per_s": events / max(wall, 1e-9),
+        "rss_mb": rss_mb,
+    }
+
+
+def run_sweep(args) -> list:
+    cells = [
+        # headline: full size, Poisson
+        dict(arrival="poisson", messages=args.messages),
+        # arrival-process coverage at a tenth the size
+        dict(arrival="diurnal", messages=max(args.messages // 10, 1000)),
+        dict(arrival="flash", messages=max(args.messages // 10, 1000)),
+    ]
+    rows = []
+    for cell in cells:
+        row = run_cell(arrival=cell["arrival"], messages=cell["messages"],
+                       devices=args.devices, consumers=args.consumers,
+                       rate_hz=args.rate_hz,
+                       payload_bytes=args.payload_bytes,
+                       service_s=args.service_s, seed=args.seed)
+        print(f"  {row['arrival']:>8}  {row['messages']:>9,} msgs  "
+              f"{row['events']:>9,} events  {row['wall_s']:6.1f} s wall  "
+              f"{row['events_per_s']:>9,.0f} ev/s  "
+              f"{row['rss_mb']:6.0f} MB rss")
+        rows.append(row)
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--messages", type=int, default=1_000_000,
+                    help="messages in the headline Poisson cell "
+                         "(diurnal/flash cells run a tenth of this)")
+    ap.add_argument("--devices", type=int, default=100)
+    ap.add_argument("--consumers", type=int, default=1000)
+    ap.add_argument("--rate-hz", type=float, default=20_000.0,
+                    help="aggregate open-loop arrival rate")
+    ap.add_argument("--payload-bytes", type=int, default=64)
+    ap.add_argument("--service-s", type=float, default=0.001,
+                    help="deterministic per-message service charge")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--check-determinism", action="store_true",
+                    help="run the sweep three times; fail unless every "
+                         "deterministic column is identical")
+    ap.add_argument("--out", default=None, help="write the report as JSON")
+    args = ap.parse_args(argv)
+
+    t0 = time.perf_counter()
+    rows = run_sweep(args)
+    total_wall = time.perf_counter() - t0
+    headline = rows[0]
+    speedup = headline["events_per_s"] / BASELINE["events_per_s"]
+    print(f"\nheadline: {headline['events_per_s']:,.0f} events/s at "
+          f"{headline['messages']:,} msgs x {headline['consumers']} "
+          f"consumers ({speedup:.1f}x the recorded "
+          f"{BASELINE['events_per_s']:,.0f} ev/s pre-rework baseline)")
+
+    rc = 0
+    if args.check_determinism:
+        def det(rs):
+            return [[r[k] for k in DETERMINISTIC_KEYS] for r in rs]
+        reruns = [run_sweep(args) for _ in range(2)]
+        if all(det(rows) == det(rn) for rn in reruns):
+            print("determinism: OK (identical deterministic columns "
+                  "across three full sweeps)")
+        else:
+            print("determinism: FAILED — deterministic columns differ")
+            rc = 1
+
+    if args.out:
+        report = {
+            "config": {"messages": args.messages, "devices": args.devices,
+                       "consumers": args.consumers, "rate_hz": args.rate_hz,
+                       "payload_bytes": args.payload_bytes,
+                       "service_s": args.service_s, "seed": args.seed},
+            "baseline": BASELINE,
+            "headline": {"events_per_s": headline["events_per_s"],
+                         "speedup_vs_baseline": speedup},
+            "rows": rows,
+        }
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=1, default=float)
+        print(f"wrote {args.out} ({total_wall:.1f} s total)")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -57,14 +57,20 @@ def _serialize(payload: Any) -> bytes:
 def _deserialize(raw: bytes) -> Any:
     if raw[:6] == b"\x93NUMPY":
         return np.load(io.BytesIO(raw), allow_pickle=False)
-    try:
+    if raw[:1] == b"\x80":
+        # our own _serialize always emits protocol>=2 pickles, which start
+        # with the PROTO opcode — cheaper than a try/except pickle probe,
+        # and raw bytes payloads (which can't start with \x80 unless they
+        # really are pickles) round-trip untouched
         import pickle
-        return pickle.loads(raw)
-    except Exception:
-        return raw
+        try:
+            return pickle.loads(raw)
+        except Exception:
+            return raw
+    return raw
 
 
-@dataclass
+@dataclass(slots=True)
 class Message:
     msg_id: str
     key: Optional[str]
@@ -121,8 +127,11 @@ class _Partition:
     def append(self, msg: Message, ready_at: float) -> int:
         with self.cond:
             msg.offset = len(self.log)
-            self.log.append(msg)
+            # ready_at first: lock-free readers (poll_nowait) gate on
+            # len(log), so by the time a message is observable its
+            # visibility time is already in place
             self.ready_at.append(ready_at)
+            self.log.append(msg)
             self.cond.notify_all()
             return msg.offset
 
@@ -138,7 +147,11 @@ class Topic:
         self.shaper = shaper
         self._clock = as_clock(clock)
         self._rr = itertools.count()
-        self._subs: List = []
+        # dict-keyed (insertion-ordered) so subscribe is idempotent and
+        # unsubscribe is O(1); produce iterates an immutable snapshot tuple
+        # rebuilt only on membership change — no per-message lock/copy
+        self._subs: Dict[Any, None] = {}
+        self._subs_cache: Tuple = ()
         self._subs_lock = threading.Lock()
 
     # -- append notifications ---------------------------------------------
@@ -148,14 +161,19 @@ class Topic:
         This is what makes event-driven consumers possible: instead of
         polling on a sleep cadence, a parked consumer is woken exactly when
         a message lands (or becomes WAN-visible). Callbacks run on the
-        producing thread/event and must not block."""
+        producing thread/event and must not block.  Subscribing the same
+        fn twice is a no-op (it fires once per append, not twice)."""
         with self._subs_lock:
-            self._subs.append(fn)
+            if fn not in self._subs:
+                self._subs[fn] = None
+                self._subs_cache = tuple(self._subs)
 
     def unsubscribe(self, fn) -> None:
+        """Remove ``fn``; unknown subscribers are tolerated."""
         with self._subs_lock:
             if fn in self._subs:
-                self._subs.remove(fn)
+                del self._subs[fn]
+                self._subs_cache = tuple(self._subs)
 
     def _honor_visibility(self) -> bool:
         """WAN-shaped visibility times are enforced when waiting for them
@@ -198,9 +216,7 @@ class Topic:
         self.metrics.stamp(msg_id, "broker_in", wan_delay_s=delay)
         self.metrics.incr(f"topic.{self.name}.bytes_in", msg.nbytes)
         self.metrics.incr(f"topic.{self.name}.msgs_in")
-        with self._subs_lock:
-            subs = list(self._subs)
-        for fn in subs:
+        for fn in self._subs_cache:     # immutable snapshot: no lock/copy
             fn(partition, now + delay)
         return msg
 
@@ -243,17 +259,18 @@ class Topic:
         ``(None, ready_at)`` when it exists but is still crossing the WAN
         (retry at ``ready_at``), and ``(None, None)`` when nothing has been
         produced at this offset yet."""
+        # lock-free: append() publishes ready_at before log, and list reads
+        # are atomic under the GIL — the event-driven hot path pays no lock
         part = self.partitions[partition]
-        honor = self._honor_visibility()
-        with part.cond:
-            if offset >= len(part.log):
-                return None, None
-            ready = part.ready_at[offset]
-            if honor and self._clock.now() < ready:
-                return None, ready
-            msg = part.log[offset]
-            self.metrics.stamp(msg.msg_id, "broker_out", visible_at=ready)
-            return msg, None
+        log = part.log
+        if offset >= len(log):
+            return None, None
+        ready = part.ready_at[offset]
+        if self._honor_visibility() and self._clock.now() < ready:
+            return None, ready
+        msg = log[offset]
+        self.metrics.stamp(msg.msg_id, "broker_out", visible_at=ready)
+        return msg, None
 
     def end_offsets(self) -> List[int]:
         return [len(p.log) for p in self.partitions]
@@ -274,32 +291,44 @@ class ConsumerGroup:
         self._clock = topic._clock
         self._lock = threading.Lock()
         self.committed = [0] * topic.n_partitions
-        self.members: List[str] = []
+        # dict-keyed membership: O(1) join/leave at 1000s of consumers
+        # (insertion-ordered, so round-robin assignment is deterministic)
+        self._members: Dict[str, None] = {}
         self.assignment: Dict[str, List[int]] = {}
+
+    @property
+    def members(self) -> List[str]:
+        return list(self._members)
 
     def join(self, consumer_id: str) -> List[int]:
         with self._lock:
-            if consumer_id not in self.members:
-                self.members.append(consumer_id)
+            self._members[consumer_id] = None
             self._rebalance_locked()
             return list(self.assignment.get(consumer_id, []))
 
     def leave(self, consumer_id: str) -> None:
         with self._lock:
-            if consumer_id in self.members:
-                self.members.remove(consumer_id)
+            self._members.pop(consumer_id, None)
             self._rebalance_locked()
 
     def _rebalance_locked(self) -> None:
-        self.assignment = {m: [] for m in self.members}
-        if not self.members:
+        # builds a *fresh* dict of fresh lists every time, so snapshots
+        # handed out by partitions_for stay valid across rebalances
+        members = list(self._members)
+        self.assignment = {m: [] for m in members}
+        if not members:
             return
+        n = len(members)
         for p in range(self.topic.n_partitions):
-            self.assignment[self.members[p % len(self.members)]].append(p)
+            self.assignment[members[p % n]].append(p)
+
+    _NO_PARTITIONS: List[int] = []
 
     def partitions_for(self, consumer_id: str) -> List[int]:
-        with self._lock:
-            return list(self.assignment.get(consumer_id, []))
+        """Current assignment snapshot. Treat as read-only: rebalances
+        replace (never mutate) the lists, so no per-call lock or copy."""
+        asg = self.assignment.get(consumer_id)
+        return asg if asg is not None else ConsumerGroup._NO_PARTITIONS
 
     def poll(self, consumer_id: str,
              timeout_s: float = 1.0) -> Optional[Message]:
@@ -330,8 +359,7 @@ class ConsumerGroup:
         nothing is pending at all)."""
         next_ready: Optional[float] = None
         for p in self.partitions_for(consumer_id):
-            with self._lock:
-                off = self.committed[p]
+            off = self.committed[p]     # int list read: GIL-atomic
             msg, ready = self.topic.poll_nowait(p, off)
             if msg is not None:
                 self.topic.metrics.stamp(msg.msg_id, "consumed",

@@ -168,20 +168,31 @@ class SpeculationStats:
 # ---------------------------------------------------------------------------
 
 
-@dataclass(frozen=True)
 class Sleep:
-    """Wait ``seconds`` (virtual under SimExecutor, clock-real otherwise)."""
-    seconds: float
+    """Wait ``seconds`` (virtual under SimExecutor, clock-real otherwise).
+
+    Effects are mutable slotted records on purpose: a pipeline body
+    allocates one per effect kind and rewrites its fields per iteration
+    (the interpreter consumes an effect synchronously at the yield point,
+    so reuse is safe) — at a million messages the per-yield dataclass
+    churn was a measurable slice of the event loop."""
+
+    __slots__ = ("seconds",)
+
+    def __init__(self, seconds: float):
+        self.seconds = seconds
 
 
-@dataclass(frozen=True)
 class Service:
     """Charge the strategy's service model for one ``stage`` invocation."""
-    stage: str
-    payload: Any = None
+
+    __slots__ = ("stage", "payload")
+
+    def __init__(self, stage: str, payload: Any = None):
+        self.stage = stage
+        self.payload = payload
 
 
-@dataclass(frozen=True)
 class Poll:
     """Next message from ``group`` for ``consumer_id`` — or ``None``.
 
@@ -193,11 +204,17 @@ class Poll:
     ``stage`` names the polling stage so the threaded strategy can keep
     its per-stage idle-slot ledger (capacity-aware speculation).
     """
-    group: Any
-    consumer_id: str
-    timeout_s: float = 0.2
-    wake_at: Optional[float] = None
-    stage: Optional[str] = None
+
+    __slots__ = ("group", "consumer_id", "timeout_s", "wake_at", "stage")
+
+    def __init__(self, group: Any, consumer_id: str, timeout_s: float = 0.2,
+                 wake_at: Optional[float] = None,
+                 stage: Optional[str] = None):
+        self.group = group
+        self.consumer_id = consumer_id
+        self.timeout_s = timeout_s
+        self.wake_at = wake_at
+        self.stage = stage
 
 
 # ---------------------------------------------------------------------------
@@ -377,9 +394,17 @@ class ThreadedExecutor:
 class _PollWait:
     """A consumer actor parked on an empty Poll, waiting to be woken.
     ``timeout_ev`` is the scheduled fallback wake (WAN ready_at or the
-    body's idle deadline), cancelled when something wakes the wait first."""
+    body's idle deadline), cancelled when something wakes the wait first.
 
-    __slots__ = ("rec", "actor", "eff", "resolved", "timeout_ev")
+    One instance per consumer record, reused across parks: ``gen`` is
+    bumped on every re-park so wake callbacks scheduled for an earlier
+    park (an append's wake event racing a timeout, say) recognise
+    themselves as stale instead of waking the *next* park early.
+    ``topic_id``/``parts`` record where the wait is registered in the
+    run's per-(topic, partition) waiter index."""
+
+    __slots__ = ("rec", "actor", "eff", "resolved", "timeout_ev", "gen",
+                 "topic_id", "parts")
 
     def __init__(self, rec: dict, actor, eff: Poll):
         self.rec = rec
@@ -387,6 +412,9 @@ class _PollWait:
         self.eff = eff
         self.resolved = False
         self.timeout_ev = None
+        self.gen = 0
+        self.topic_id = 0
+        self.parts: Sequence[int] = ()
 
 
 class _ServiceOp:
@@ -445,10 +473,18 @@ class SimExecutor:
         the consumer mid-run; ``"silent"`` goes dark so the heartbeat
         monitor must detect the loss). ``repro.sim.scenarios.FailureSpec``
         matches this shape.
-    autoscaler: an :class:`~repro.core.elastic.AutoScaler` stepped every
-        ``autoscale_interval_s`` of virtual time; after each resize the
-        executor grows/shrinks the live consumer pool to the pilot's
-        worker count (scaling decisions visibly change the dataflow).
+    autoscaler: an :class:`~repro.core.elastic.AutoScaler` for the *final*
+        stage, stepped every ``autoscale_interval_s`` of virtual time;
+        after each resize the executor grows/shrinks the live consumer
+        pool to the pilot's worker count (scaling decisions visibly
+        change the dataflow).
+    autoscalers: per-stage policies — a mapping of stage (index, negative
+        index, or stage name) to AutoScaler, each reconciling *its* stage's
+        consumer pool.  Stage 0 (the sources) cannot be autoscaled.  May be
+        combined with ``autoscaler`` (which is shorthand for the final
+        stage); a bursty open-loop arrival process typically wants a
+        policy on every consumer stage so traffic doesn't just queue at
+        the first hop.
     speculative_factor: straggler speculation at service-charge
         granularity (default: the pipeline's ``speculative_factor``,
         mirroring :class:`TaskRuntime`'s knob under virtual time).  A
@@ -469,6 +505,7 @@ class SimExecutor:
                  producer_offsets: Sequence[float] = (),
                  crash_plan: Sequence[Any] = (),
                  autoscaler=None,
+                 autoscalers: Optional[Dict[Any, Any]] = None,
                  autoscale_interval_s: float = 0.2,
                  monitor_interval_s: float = 0.5,
                  speculative_factor: Optional[float] = None):
@@ -477,6 +514,7 @@ class SimExecutor:
         self.producer_offsets = tuple(producer_offsets)
         self.crash_plan = tuple(crash_plan)
         self.autoscaler = autoscaler
+        self.autoscalers = dict(autoscalers) if autoscalers else {}
         self.autoscale_interval_s = autoscale_interval_s
         self.monitor_interval_s = monitor_interval_s
         self.speculative_factor = speculative_factor
@@ -516,15 +554,50 @@ class _SimRun:
         self.tasks: Dict[str, dict] = {}
         self.consumer_recs: List[dict] = []       # spawn order (autoscale)
         self._task_seq = itertools.count()
-        self._consumer_seq = itertools.count(pipe.stage_tasks(-1))
         self._subs: List = []                     # per-topic callbacks
+        # (id(topic), partition) -> {id(wait): wait}: which parked
+        # consumers an append to that partition can possibly wake — the
+        # O(1) replacement for scanning every task per message
+        self._waiters: Dict[Any, Dict[int, _PollWait]] = {}
+        self._rebal_ev = None        # coalesced pending rebalance wake-all
         self.shared: dict = {}
+        # per-stage autoscaling: the legacy single `autoscaler` is
+        # shorthand for the final stage; `autoscalers` maps stage
+        # index/name to a scaler. cid counters continue each stage's
+        # static numbering.
+        self.autoscalers: Dict[int, Any] = {}
+        if ex.autoscaler is not None:
+            self.autoscalers[len(pipe.stages) - 1] = ex.autoscaler
+        for key, scaler in ex.autoscalers.items():
+            si = self._resolve_stage(key)
+            if si == 0:
+                raise ValueError("stage 0 (the sources) cannot be "
+                                 "autoscaled — sources are not consumers")
+            self.autoscalers[si] = scaler
+        self._stage_seq: Dict[int, Any] = {
+            si: itertools.count(pipe.stage_tasks(si))
+            for si in self.autoscalers}
         factor = (ex.speculative_factor if ex.speculative_factor is not None
                   else pipe._runtime_kw["speculative_factor"])
         self.speculation = (SpeculationStats(factor, pipe.metrics)
                             if factor > 0 and ex.service_model is not None
                             else None)
         ex.speculation = self.speculation
+
+    def _resolve_stage(self, key) -> int:
+        stages = self.pipe.stages
+        if isinstance(key, str):
+            for i, st in enumerate(stages):
+                if st.name == key:
+                    return i
+            raise ValueError(f"unknown stage {key!r} "
+                             f"(have {[s.name for s in stages]})")
+        si = int(key)
+        if si < 0:
+            si += len(stages)
+        if not 0 <= si < len(stages):
+            raise ValueError(f"stage index {key} out of range")
+        return si
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -548,17 +621,16 @@ class _SimRun:
                 self._spawn_consumer(pipe.stage_cid(si, i), si, at=t0)
         for f in self.ex.crash_plan:
             self.sched.at(t0 + float(f.at_s), lambda f=f: self._inject(f))
-        if self.ex.autoscaler is not None:
+        if self.autoscalers:
             self.sched.after(self.ex.autoscale_interval_s,
                              self._autoscale_tick)
         self.sched.after(self.ex.monitor_interval_s, self._monitor_tick)
 
+        # the whole run is one scheduler call: the loop stays inside
+        # EventScheduler.run (no per-event next_time/step round-trip),
+        # stopping the moment the pipeline reports completion
         deadline = t0 + state.timeout_s
-        while not state.stop.is_set():
-            nt = self.sched.next_time
-            if nt is None or nt > deadline:
-                break
-            self.sched.step()
+        self.sched.run(until=deadline, stop=state.stop.is_set)
         if state.t_done is None:
             state.t_done = min(self.clock.now(), deadline)
         state.stop.set()
@@ -584,6 +656,7 @@ class _SimRun:
                          if kind == "consumer" else None),
                "attempt": 0, "retries_left": self.max_retries,
                "actor": None, "ctx": None, "wait": None, "svc": None,
+               "pollwait": None,                  # reusable _PollWait slot
                "helping": None,
                "last_beat": self.clock.now(), "exit_reason": None}
         self.tasks[rec["task_id"]] = rec
@@ -621,8 +694,16 @@ class _SimRun:
             # parked survivors may now own pending messages. Scheduled at
             # the same timestamp (later insertion seq), this runs right
             # after the actor's first step, i.e. after its group.join.
-            self.sched.at(self.clock.now() if at is None else at,
-                          self._wake_all_parked)
+            # Coalesced: a fleet of same-instant launches (startup, an
+            # autoscale burst) triggers ONE wake-all, after the *last*
+            # join — reschedule (cancel + re-push, later seq) instead of
+            # stacking an O(fleet) wake-all per member. Any not-yet-fired
+            # wake is for this same instant (events run in time order),
+            # so moving it behind the newest join loses nothing.
+            if self._rebal_ev is not None:
+                self._rebal_ev.cancel()
+            self._rebal_ev = self.sched.at(
+                self.clock.now() if at is None else at, self._rebal_wake)
 
     def _beat(self, rec: dict) -> None:
         rec["last_beat"] = self.clock.now()
@@ -667,20 +748,55 @@ class _SimRun:
         # ready_at — is not a hung task: the monitor skips recs with a
         # live wait, and _beat keeps the timestamps honest.
         self._beat(rec)
-        wait = _PollWait(rec, actor, eff)
+        wait = rec["pollwait"]
+        if wait is None:
+            wait = _PollWait(rec, actor, eff)
+            rec["pollwait"] = wait
+        else:
+            wait.actor = actor
+            wait.eff = eff
+            wait.resolved = False
+            wait.timeout_ev = None
+            wait.gen += 1
         rec["wait"] = wait
+        # index the wait under its assigned (topic, partition) keys so an
+        # append wakes exactly the consumers that can see the message
+        group = eff.group
+        tid = id(group.topic)
+        parts = group.partitions_for(eff.consumer_id)
+        wait.topic_id = tid
+        wait.parts = parts
+        waiters = self._waiters
+        for p in parts:
+            d = waiters.get((tid, p))
+            if d is None:
+                waiters[(tid, p)] = d = {}
+            d[id(wait)] = wait
         if ready is not None:
             # message in flight across the WAN: exact wakeup at ready_at
             wait.timeout_ev = self.sched.at(
-                ready, lambda: self._wake(wait, False))
+                ready, lambda w=wait, g=wait.gen: self._wake(w, False, g))
         elif eff.wake_at is not None:
             wait.timeout_ev = self.sched.at(
-                eff.wake_at, lambda: self._wake(wait, True))
+                eff.wake_at,
+                lambda w=wait, g=wait.gen: self._wake(w, True, g))
 
-    def _wake(self, wait: _PollWait, timed_out: bool) -> None:
+    def _unregister(self, wait: _PollWait) -> None:
+        waiters, tid = self._waiters, wait.topic_id
+        for p in wait.parts:
+            d = waiters.get((tid, p))
+            if d is not None:
+                d.pop(id(wait), None)
+        wait.parts = ()
+
+    def _wake(self, wait: _PollWait, timed_out: bool,
+              gen: Optional[int] = None) -> None:
+        if gen is not None and gen != wait.gen:
+            return                      # wake scheduled for an earlier park
         if wait.resolved or not wait.actor.alive:
             return
         wait.resolved = True
+        self._unregister(wait)
         wait.rec["wait"] = None
         if wait.timeout_ev is not None:
             wait.timeout_ev.cancel()
@@ -692,21 +808,27 @@ class _SimRun:
         self._attempt_poll(wait.rec, wait.actor, wait.eff)
 
     def _on_append(self, topic, partition: int, ready_at: float) -> None:
+        d = self._waiters.get((id(topic), partition))
+        if not d:
+            return
         now = self.clock.now()
-        for rec in list(self.tasks.values()):
-            wait = rec["wait"]
-            if wait is None or wait.resolved:
+        if ready_at < now:
+            ready_at = now
+        for wait in d.values():
+            if wait.resolved:
                 continue
-            # only wake waiters of this hop's topic actually assigned this
-            # partition (a membership change re-checks everyone via
-            # _wake_all_parked)
-            if wait.eff.group.topic is not topic:
-                continue
+            # a registration can outlive a rebalance for an instant (the
+            # rebalance's _wake_all_parked is what re-registers) — only
+            # wake waiters actually assigned this partition right now
             if partition not in wait.eff.group.partitions_for(
                     wait.eff.consumer_id):
                 continue
-            self.sched.at(max(ready_at, now),
-                          lambda w=wait: self._wake(w, False))
+            self.sched.at(ready_at,
+                          lambda w=wait, g=wait.gen: self._wake(w, False, g))
+
+    def _rebal_wake(self) -> None:
+        self._rebal_ev = None
+        self._wake_all_parked()
 
     def _wake_all_parked(self) -> None:
         """Rebalance wakeup: membership changed (join/leave), so parked
@@ -844,6 +966,7 @@ class _SimRun:
         wait = rec["wait"]
         if wait is not None:
             wait.resolved = True
+            self._unregister(wait)
             if wait.timeout_ev is not None:
                 wait.timeout_ev.cancel()
                 wait.timeout_ev = None
@@ -963,28 +1086,31 @@ class _SimRun:
                         f"heartbeat lost ({rec['task_id']})"))
         self.sched.after(self.ex.monitor_interval_s, self._monitor_tick)
 
-    def _alive_consumers(self) -> List[dict]:
-        """Final-stage consumers still alive — the pool the autoscaler
-        grows/shrinks (intermediate stages keep their static pools)."""
-        last = len(self.pipe.stages) - 1
+    def _alive_consumers(self, stage: Optional[int] = None) -> List[dict]:
+        """Consumers of ``stage`` (default: final) still alive — the pool
+        that stage's autoscaler grows/shrinks (stages without a policy
+        keep their static pools)."""
+        if stage is None:
+            stage = len(self.pipe.stages) - 1
         return [r for r in self.consumer_recs
-                if r["stage"] == last and r["task_id"] in self.tasks]
+                if r["stage"] == stage and r["task_id"] in self.tasks]
 
     def _autoscale_tick(self) -> None:
         if self.state.stop.is_set():
             return
-        self.ex.autoscaler.step_once()
-        last = len(self.pipe.stages) - 1
-        target = self.pipe.stages[last].pilot.resource.n_workers
-        alive = self._alive_consumers()
-        if target > len(alive):
-            for _ in range(target - len(alive)):
-                cid = f"consumer-{next(self._consumer_seq)}"
-                self.metrics.event("consumer_spawned", consumer=cid)
-                self._spawn_consumer(cid, last)
-        elif target < len(alive):
-            for rec in alive[target:]:         # retire the newest first
-                if rec["actor"] is not None and rec["actor"].alive:
-                    rec["exit_reason"] = "retire"
-                    rec["actor"].kill()
+        for si in sorted(self.autoscalers):
+            scaler = self.autoscalers[si]
+            scaler.step_once()
+            target = self.pipe.stages[si].pilot.resource.n_workers
+            alive = self._alive_consumers(si)
+            if target > len(alive):
+                for _ in range(target - len(alive)):
+                    cid = self.pipe.stage_cid(si, next(self._stage_seq[si]))
+                    self.metrics.event("consumer_spawned", consumer=cid)
+                    self._spawn_consumer(cid, si)
+            elif target < len(alive):
+                for rec in alive[target:]:     # retire the newest first
+                    if rec["actor"] is not None and rec["actor"].alive:
+                        rec["exit_reason"] = "retire"
+                        rec["actor"].kill()
         self.sched.after(self.ex.autoscale_interval_s, self._autoscale_tick)

@@ -48,7 +48,7 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence
 
 from repro.core.broker import Broker, ConsumerGroup, Topic, WanShaper
-from repro.core.executor import Poll, Service, ThreadedExecutor
+from repro.core.executor import Poll, Service, Sleep, ThreadedExecutor
 from repro.core.monitoring import MetricsRegistry
 from repro.core.params_service import ParameterService
 from repro.core.pilot import Pilot
@@ -113,6 +113,10 @@ class _RunState:
     n_messages: int
     timeout_s: float
     collect: bool
+    # open-loop traffic: per-device sorted absolute arrival times (seconds
+    # from run start). None = closed-loop (devices produce back-to-back,
+    # paced only by the service model).
+    arrivals: Optional[List[Sequence[float]]] = None
     results: List[Any] = field(default_factory=list)
     seen: List[set] = field(default_factory=list)
     # (stage_idx, cid, attempt) -> msg_id currently holding a dedup
@@ -215,6 +219,8 @@ class ContinuumPipeline:
         self._topics: List[Topic] = []
         self._topic: Optional[Topic] = None
         self._group: Optional[ConsumerGroup] = None
+        self._run_groups: List[ConsumerGroup] = []
+        self._arrival_plan: Optional[List[Sequence[float]]] = None
 
     # -- construction helpers ------------------------------------------------
 
@@ -318,6 +324,19 @@ class ContinuumPipeline:
         g = self._group
         return g.lag() if g is not None else 0
 
+    def stage_lag(self, stage_idx: int) -> int:
+        """Broker lag of stage ``stage_idx``'s consumer group in the live
+        run (0 when no run is active) — the per-stage ``lag_fn`` for
+        per-stage autoscaling policies.  Stage 1..N-1 (stage 0, the
+        sources, consumes nothing)."""
+        groups = self._run_groups
+        if not groups:
+            return 0
+        if not 1 <= stage_idx < len(self.stages):
+            raise ValueError(f"stage_lag wants a consumer stage index in "
+                             f"[1, {len(self.stages) - 1}], got {stage_idx}")
+        return groups[stage_idx - 1].lag()
+
     # -- task bodies (cooperative; interpreted by the strategy) ---------------
 
     def _invoke_source(self, ctx: TaskContext) -> Any:
@@ -326,18 +345,52 @@ class ContinuumPipeline:
     def _source_body(self, ctx: TaskContext, state: _RunState,
                      device_idx: int, count: int):
         """One source device: generate → first topic, ``count`` times.
-        ``Service(<source stage>)`` charges the strategy's per-message
-        generation cost (zero unless a service model is set)."""
+
+        Closed-loop (``state.arrivals is None``): produce back-to-back,
+        each message charged ``Service(<source stage>)`` — the strategy's
+        per-message generation cost (zero unless a service model is set).
+
+        Open-loop (``state.arrivals`` set): the device releases messages
+        at its pre-drawn absolute arrival times — traffic intensity is a
+        property of the *arrival process*, not of how fast the pipeline
+        drains, so bursts genuinely queue.  Generation cost is not
+        charged (the arrival time already embodies when the message
+        exists).
+
+        One reused effect record per kind: the interpreter consumes the
+        effect synchronously at the yield, so mutating it next iteration
+        is safe — and a million-message run skips a million allocations.
+        """
         topic = state.topics[0]
+        partition = device_idx % self.n_partitions
         stage_name = self.stages[0].name
+        arrivals = (state.arrivals[device_idx]
+                    if state.arrivals is not None else None)
+        if arrivals is not None:
+            t0 = ctx.clock.now()
+            slp = Sleep(0.0)
+            for t_arr in arrivals:
+                dt = t0 + t_arr - ctx.clock.now()
+                if dt > 0:
+                    slp.seconds = dt
+                    yield slp
+                if state.stop.is_set():
+                    return
+                data = self._invoke_source(ctx)
+                topic.produce(data, partition=partition)
+                ctx.heartbeat()
+            return
+        svc = Service(stage_name)
         for _ in range(count):
             if state.stop.is_set():
                 return
             data = self._invoke_source(ctx)
-            yield Service(stage_name, data)
+            svc.payload = data
+            yield svc
+            svc.payload = None
             if state.stop.is_set():
                 return
-            topic.produce(data, partition=device_idx % self.n_partitions)
+            topic.produce(data, partition=partition)
             ctx.heartbeat()
 
     def _stage_body(self, ctx: TaskContext, state: _RunState,
@@ -357,9 +410,13 @@ class ContinuumPipeline:
         stage_name = self.stages[stage_idx].name
         clock = ctx.clock
         idle_deadline = clock.now() + state.timeout_s
+        # reused effect records (see _source_body): the interpreter reads
+        # them synchronously at the yield point
+        poll = Poll(group, cid, timeout_s=0.2, stage=stage_name)
+        svc = Service(stage_name)
         while not state.stop.is_set():
-            msg = yield Poll(group, cid, timeout_s=0.2,
-                             wake_at=idle_deadline, stage=stage_name)
+            poll.wake_at = idle_deadline
+            msg = yield poll
             if msg is None:
                 if (state.n_processed >= state.n_messages
                         or clock.now() >= idle_deadline):
@@ -377,7 +434,9 @@ class ContinuumPipeline:
             state.inflight[inflight_key] = msg.msg_id
             try:
                 data = msg.value()
-                yield Service(stage_name, data)
+                svc.payload = data
+                yield svc
+                svc.payload = None
                 fn = self._fn(stage_name)
                 out = fn(ctx, data=data)
             except BaseException:
@@ -432,20 +491,31 @@ class ContinuumPipeline:
                                         group_id=f"{stage.name}-group"))
         # paper: messages split across devices, one partition per device
         n_src = self.stage_tasks(0)
-        per_device = [n_messages // n_src] * n_src
-        for i in range(n_messages % n_src):
-            per_device[i] += 1
+        arrivals = self._arrival_plan
+        if arrivals is not None:
+            if len(arrivals) != n_src:
+                raise ValueError(
+                    f"arrival plan has {len(arrivals)} device streams, "
+                    f"pipeline has {n_src} source tasks")
+            per_device = [len(a) for a in arrivals]
+            n_messages = sum(per_device)
+        else:
+            per_device = [n_messages // n_src] * n_src
+            for i in range(n_messages % n_src):
+                per_device[i] += 1
         self._topics = topics
         self._topic = topics[0]
         self._group = groups[-1]
+        self._run_groups = groups
         return _RunState(topics=topics, groups=groups,
                          per_device=per_device,
                          seen=[set() for _ in groups],
                          n_messages=n_messages, timeout_s=timeout_s,
-                         collect=collect_results)
+                         collect=collect_results, arrivals=arrivals)
 
     def _finish(self, state: _RunState, wall_s: float) -> PipelineResult:
         self._group = None        # current_lag() reads 0 between runs
+        self._run_groups = []     # stage_lag() likewise
         n_prod = int(self.metrics.counter(
             f"topic.{state.topics[0].name}.msgs_in"))
         return PipelineResult(results=state.results, metrics=self.metrics,
@@ -458,9 +528,17 @@ class ContinuumPipeline:
             scheduler=None, placement: Optional[str] = None,
             latency_budget: Optional[float] = None,
             wan_budget: Optional[float] = None,
-            hybrid_reduce: Optional[List[int]] = None):
+            hybrid_reduce: Optional[List[int]] = None,
+            arrival_plan: Optional[List[Sequence[float]]] = None):
         """Drive ``n_messages`` end-to-end (default 512 — what the paper
         sends per run).
+
+        ``arrival_plan`` switches the sources to *open-loop* traffic: one
+        sorted sequence of absolute arrival times (seconds from run
+        start) per source device — e.g. drawn from
+        :class:`repro.sim.scenarios.PoissonArrivals` /
+        ``DiurnalArrivals`` / ``FlashCrowdArrivals``.  ``n_messages`` is
+        then taken from the plan (and must not disagree if given).
 
         ``scheduler`` selects the execution strategy:
         :class:`~repro.core.executor.ThreadedExecutor` (default — real
@@ -514,11 +592,23 @@ class ContinuumPipeline:
                 f"unsupported run-time placement {placement!r} "
                 f"(constructor placement is {self.placement!r}; "
                 f"run-time only supports 'advise')")
+        if arrival_plan is not None:
+            plan_total = sum(len(a) for a in arrival_plan)
+            if n_messages is not None and n_messages != plan_total:
+                raise ValueError(
+                    f"n_messages={n_messages} disagrees with the arrival "
+                    f"plan's {plan_total} arrivals — omit n_messages")
+            n_messages = plan_total
         n_messages = 512 if n_messages is None else n_messages
-        strategy = scheduler if scheduler is not None else ThreadedExecutor()
-        return strategy.run(self, n_messages=n_messages,
-                            timeout_s=timeout_s,
-                            collect_results=collect_results)
+        self._arrival_plan = arrival_plan
+        try:
+            strategy = (scheduler if scheduler is not None
+                        else ThreadedExecutor())
+            return strategy.run(self, n_messages=n_messages,
+                                timeout_s=timeout_s,
+                                collect_results=collect_results)
+        finally:
+            self._arrival_plan = None
 
 
 class EdgeToCloudPipeline(ContinuumPipeline):

@@ -127,6 +127,11 @@ class SimClock(Clock):
     # -- reading / driving time ------------------------------------------
 
     def now(self) -> float:
+        # auto-advance clocks are single-threaded by construction (the DES
+        # owns them; ThreadedExecutor rejects them), so the hot read skips
+        # the lock — a float attribute read is atomic under the GIL anyway
+        if self.auto_advance:
+            return self._now
         with self._cond:
             return self._now
 
@@ -134,6 +139,9 @@ class SimClock(Clock):
         """Move time forward by ``dt`` seconds; wakes sleepers."""
         if dt < 0:
             raise ValueError(f"cannot advance by {dt}")
+        if self.auto_advance:
+            self._now += float(dt)          # no sleepers to wake
+            return self._now
         with self._cond:
             self._now += float(dt)
             self._cond.notify_all()
@@ -141,6 +149,10 @@ class SimClock(Clock):
 
     def advance_to(self, t: float) -> float:
         """Move time to ``t`` (no-op if ``t`` is in the past)."""
+        if self.auto_advance:
+            if t > self._now:
+                self._now = float(t)
+            return self._now
         with self._cond:
             if t > self._now:
                 self._now = float(t)
@@ -166,13 +178,11 @@ class SimClock(Clock):
     def sleep(self, dt: float) -> None:
         if dt <= 0:
             return
+        if self.auto_advance:
+            self._now += dt
+            return
         with self._cond:
             deadline = self._now + dt
-            if self.auto_advance:
-                if deadline > self._now:
-                    self._now = deadline
-                    self._cond.notify_all()
-                return
             self._n_sleepers += 1
             try:
                 while self._now < deadline and not self._closed:

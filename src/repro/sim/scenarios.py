@@ -138,6 +138,122 @@ AUTOENCODER = MODELS["autoencoder"]
 ISOFOREST = MODELS["isoforest"]
 
 
+class ArrivalProcess:
+    """Open-loop traffic model: where closed-loop sources produce as fast
+    as the pipeline drains (throughput measures the *pipeline*), an
+    arrival process pre-draws the absolute times at which messages enter
+    the system (traffic intensity is a property of the *workload* — the
+    realistic shape for continuum orchestration studies, where bursts
+    must genuinely queue).  ``times(n, seed)`` returns ``n`` sorted
+    absolute arrival seconds, bit-reproducible for a seed."""
+
+    def times(self, n: int, seed: int) -> np.ndarray:
+        raise NotImplementedError
+
+    # -- Lewis–Shedler thinning (shared by the nonhomogeneous processes) --
+
+    def _thin(self, n: int, seed: int, lam_max: float, lam) -> np.ndarray:
+        """Draw ``n`` arrivals of a nonhomogeneous Poisson process with
+        intensity ``lam(t) <= lam_max`` by thinning a homogeneous
+        ``lam_max`` process."""
+        rng = np.random.default_rng(seed)
+        out = np.empty(n, np.float64)
+        t, i = 0.0, 0
+        while i < n:
+            # batched candidate draws: one rng round-trip per ~4n points
+            gaps = rng.exponential(1.0 / lam_max, size=max(n, 1024))
+            us = rng.random(size=gaps.shape[0])
+            for g, u in zip(gaps, us):
+                t += g
+                if u * lam_max <= lam(t):
+                    out[i] = t
+                    i += 1
+                    if i == n:
+                        break
+        return out
+
+
+@dataclass(frozen=True)
+class PoissonArrivals(ArrivalProcess):
+    """Homogeneous Poisson arrivals at ``rate_hz`` (aggregate, across all
+    devices): i.i.d. exponential gaps."""
+    rate_hz: float
+
+    def __post_init__(self):
+        if self.rate_hz <= 0.0:
+            raise ValueError("rate_hz must be > 0")
+
+    def times(self, n: int, seed: int) -> np.ndarray:
+        rng = np.random.default_rng(seed)
+        return np.cumsum(rng.exponential(1.0 / self.rate_hz, size=n))
+
+
+@dataclass(frozen=True)
+class DiurnalArrivals(ArrivalProcess):
+    """Day/night load curve: intensity swings sinusoidally between
+    ``base_rate_hz`` (trough) and ``peak_rate_hz`` over ``period_s``,
+    starting at the trough — the survey's canonical diurnal shape."""
+    base_rate_hz: float
+    peak_rate_hz: float
+    period_s: float
+
+    def __post_init__(self):
+        if self.base_rate_hz <= 0.0 or self.period_s <= 0.0:
+            raise ValueError("base_rate_hz and period_s must be > 0")
+        if self.peak_rate_hz < self.base_rate_hz:
+            raise ValueError("peak_rate_hz must be >= base_rate_hz")
+
+    def times(self, n: int, seed: int) -> np.ndarray:
+        base, peak = self.base_rate_hz, self.peak_rate_hz
+        w = 2.0 * np.pi / self.period_s
+
+        def lam(t):
+            return base + (peak - base) * 0.5 * (1.0 - np.cos(w * t))
+
+        return self._thin(n, seed, peak, lam)
+
+
+@dataclass(frozen=True)
+class FlashCrowdArrivals(ArrivalProcess):
+    """Flash-crowd burst: steady ``base_rate_hz`` background with a
+    ``burst_rate_hz`` spike in ``[burst_at_s, burst_at_s +
+    burst_duration_s)`` — the traffic shape per-stage autoscaling exists
+    for."""
+    base_rate_hz: float
+    burst_rate_hz: float
+    burst_at_s: float
+    burst_duration_s: float
+
+    def __post_init__(self):
+        if self.base_rate_hz <= 0.0 or self.burst_duration_s <= 0.0 \
+                or self.burst_at_s < 0.0:
+            raise ValueError("base_rate_hz and burst_duration_s must be "
+                             "> 0, burst_at_s >= 0")
+        if self.burst_rate_hz < self.base_rate_hz:
+            raise ValueError("burst_rate_hz must be >= base_rate_hz")
+
+    def times(self, n: int, seed: int) -> np.ndarray:
+        base, burst = self.base_rate_hz, self.burst_rate_hz
+        t0, t1 = self.burst_at_s, self.burst_at_s + self.burst_duration_s
+
+        def lam(t):
+            return burst if t0 <= t < t1 else base
+
+        return self._thin(n, seed, burst, lam)
+
+
+def arrival_plan(sc: "Scenario") -> Optional[List[np.ndarray]]:
+    """The scenario's per-device open-loop arrival plan (None when the
+    scenario is closed-loop): one aggregate draw of ``n_messages``
+    arrival times, dealt round-robin across the devices — each device's
+    stream stays sorted, and the interleaved aggregate reproduces the
+    process exactly."""
+    if sc.arrival is None:
+        return None
+    times = sc.arrival.times(sc.n_messages, sc.seed)
+    return [times[i::sc.n_devices] for i in range(sc.n_devices)]
+
+
 @dataclass(frozen=True)
 class FailureSpec:
     """Crash consumer ``consumer_idx`` at virtual time ``at_s``; a
@@ -168,7 +284,15 @@ class Scenario:
     gen_s_per_point: float = DEFAULT_GEN_S_PER_POINT  # Mini-App gen cost
     failures: Tuple[FailureSpec, ...] = ()
     autoscale: Optional[ScalePolicy] = None   # lag-driven resize in the DES
+    # per-stage policies: ((stage_name, policy), ...) — every named
+    # consumer stage gets its own lag-driven AutoScaler (the final stage
+    # may instead/additionally use the legacy `autoscale` knob)
+    autoscale_stages: Tuple[Tuple[str, ScalePolicy], ...] = ()
     autoscale_interval_s: float = 0.2
+    # open-loop traffic: messages enter at the process's drawn times
+    # instead of back-to-back (None = closed-loop; producer boot offsets
+    # are then skipped — arrival times already carry the phases)
+    arrival: Optional[ArrivalProcess] = None
     seed: int = 0
     t_max_s: float = 36_000.0                 # virtual-time safety cap
     # lognormal stage noise: 0 = off (the noise-free Fig-3 pins),
@@ -195,7 +319,8 @@ class Scenario:
     def label(self) -> str:
         return (f"{self.model.name}/{self.placement}/{self.wan_band}"
                 f"{'/fail' if self.failures else ''}"
-                f"{'/autoscale' if self.autoscale else ''}")
+                f"{'/autoscale' if self.autoscale or self.autoscale_stages else ''}"
+                f"{'/open-loop' if self.arrival else ''}")
 
 
 @dataclass
@@ -405,15 +530,30 @@ def build_pipeline(sc: Scenario):
         scaler = AutoScaler(mgr, cloud, lag_fn=pipe.current_lag,
                             policy=sc.autoscale, metrics=metrics,
                             interval_s=sc.autoscale_interval_s, clock=clock)
-    # deterministic per-device phase offsets (devices don't boot in
-    # lockstep), drawn in device order from the seeded rng
-    rng = np.random.default_rng(sc.seed)
-    gen_s = sc.gen_s_per_point * sc.n_points
-    offsets = [float(rng.uniform(0.0, gen_s + 1e-9))
-               for _ in range(sc.n_devices)]
+    # per-stage policies: each named consumer stage gets its own scaler
+    # watching *its* group's lag and resizing *its* pilot
+    stage_names = [s.name for s in pipe.stages]
+    scalers = {}
+    for name, policy in sc.autoscale_stages:
+        si = stage_names.index(name)
+        scalers[name] = AutoScaler(
+            mgr, pipe.stages[si].pilot,
+            lag_fn=(lambda i=si: pipe.stage_lag(i)),
+            policy=policy, metrics=metrics,
+            interval_s=sc.autoscale_interval_s, clock=clock)
+    if sc.arrival is not None:
+        # open loop: the drawn arrival times carry the device phases
+        offsets = []
+    else:
+        # deterministic per-device phase offsets (devices don't boot in
+        # lockstep), drawn in device order from the seeded rng
+        rng = np.random.default_rng(sc.seed)
+        gen_s = sc.gen_s_per_point * sc.n_points
+        offsets = [float(rng.uniform(0.0, gen_s + 1e-9))
+                   for _ in range(sc.n_devices)]
     ex = SimExecutor(clock=clock, service_model=_service_model(sc),
                      producer_offsets=offsets, crash_plan=sc.failures,
-                     autoscaler=scaler,
+                     autoscaler=scaler, autoscalers=scalers,
                      autoscale_interval_s=sc.autoscale_interval_s)
     return pipe, ex, mgr
 
@@ -423,8 +563,13 @@ def run_scenario(sc: Scenario) -> ScenarioResult:
     deterministic metrics."""
     t_wall = _walltime.perf_counter()
     pipe, ex, _ = build_pipeline(sc)
-    res = pipe.run(n_messages=sc.n_messages, timeout_s=sc.t_max_s,
-                   collect_results=False, scheduler=ex)
+    plan = arrival_plan(sc)
+    if plan is not None:
+        res = pipe.run(timeout_s=sc.t_max_s, collect_results=False,
+                       scheduler=ex, arrival_plan=plan)
+    else:
+        res = pipe.run(n_messages=sc.n_messages, timeout_s=sc.t_max_s,
+                       collect_results=False, scheduler=ex)
     metrics = res.metrics
 
     lat = metrics.latencies("produced", "processed")
@@ -433,7 +578,11 @@ def run_scenario(sc: Scenario) -> ScenarioResult:
     last = metrics.last_stamp("processed") or 0.0
     makespan = max(last - first, 1e-9)
     n_done = res.n_processed
-    scaler = ex.autoscaler
+    histories: List[dict] = []
+    if ex.autoscaler is not None:
+        histories.extend(ex.autoscaler.history)
+    for s in ex.autoscalers.values():
+        histories.extend(s.history)
 
     def pct(q):
         return lat[min(len(lat) - 1, int(q * len(lat)))] if lat else 0.0
@@ -459,7 +608,7 @@ def run_scenario(sc: Scenario) -> ScenarioResult:
         spec_losses=int(metrics.counter("runtime.speculative_losses")),
         spec_cancelled=int(metrics.counter("runtime.speculative_cancelled")),
         placement_estimates=placement_estimates(sc),
-        autoscale_events=list(scaler.history) if scaler else [],
+        autoscale_events=histories,
         wall_ms=(_walltime.perf_counter() - t_wall) * 1e3,
         metrics=metrics)
 

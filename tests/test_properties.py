@@ -283,3 +283,116 @@ def test_ssd_prefix_causality(seed, s):
                             C_[:, :cut], D)
     np.testing.assert_allclose(np.asarray(y_full[:, :cut]),
                                np.asarray(y_half), atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# compacting event-heap invariants (the DES hot path)
+# ---------------------------------------------------------------------------
+
+from repro.sim import EventScheduler  # noqa: E402
+
+
+@given(data=st.data())
+@settings(**SETTINGS)
+def test_event_heap_order_and_len_under_interleaving(data):
+    """Under any interleaving of at/after/cancel/step, ``len(sched)``
+    equals the number of scheduled-but-unfired-and-uncancelled events,
+    and events fire in (time, insertion order) — cancelled entries are
+    never executed and never perturb the tie-break of survivors."""
+    sched = EventScheduler()
+    fired = []
+    model = {}                           # ev_id -> (t, insertion_seq)
+    handles = {}
+    next_id = 0
+    ops = data.draw(st.lists(
+        st.sampled_from(["at", "after", "cancel", "step"]),
+        min_size=1, max_size=120))
+    for op in ops:
+        if op in ("at", "after"):
+            i = next_id
+            next_id += 1
+            fn = lambda i=i: fired.append(i)      # noqa: E731
+            if op == "at":
+                t = data.draw(st.sampled_from(
+                    [0.0, 0.5, 1.0, 1.5, 2.0, 5.0]))
+                t = max(t, sched.clock.now())     # at() clamps to now
+                handles[i] = sched.at(t, fn)
+            else:
+                d = data.draw(st.sampled_from([0.0, 0.5, 2.0]))
+                t = sched.clock.now() + d
+                handles[i] = sched.after(d, fn)
+            model[i] = (t, i)
+        elif op == "cancel" and model:
+            i = data.draw(st.sampled_from(sorted(model)))
+            handles[i].cancel()
+            del model[i]
+        elif op == "step":
+            ran = sched.step()
+            if model:
+                expect = min(model, key=model.get)
+                assert ran and fired[-1] == expect
+                del model[expect]
+            else:
+                assert not ran
+        assert len(sched) == len(model)
+    # drain: the survivors fire in model order, nothing extra, len hits 0
+    rest = sorted(model, key=model.get)
+    n_before = len(fired)
+    sched.run()
+    assert fired[n_before:] == rest
+    assert len(sched) == 0
+
+
+@given(n_total=st.integers(80, 200), n_keep=st.integers(1, 10),
+       seed=st.integers(0, 500))
+@settings(**SETTINGS)
+def test_event_heap_compaction_drops_nothing_reorders_nothing(
+        n_total, n_keep, seed):
+    """Mass cancellation crosses the compaction threshold (dead > 64 and
+    dead > live): the rebuilt heap must still fire exactly the surviving
+    events, in (time, insertion) order, with ``len`` intact throughout."""
+    rng = np.random.default_rng(seed)
+    sched = EventScheduler()
+    fired = []
+    times = rng.integers(0, 8, size=n_total) * 0.5
+    handles = [sched.at(float(t), lambda i=i: fired.append(i))
+               for i, t in enumerate(times)]
+    keep = set(rng.choice(n_total, size=n_keep, replace=False).tolist())
+    for i, h in enumerate(handles):
+        if i not in keep:
+            h.cancel()
+        assert len(sched) == n_total - (i + 1 - len(keep & set(range(i + 1))))
+    assert sched.compactions >= 1        # the sweep actually compacted
+    assert len(sched) == len(keep)
+    sched.run()
+    assert fired == sorted(keep, key=lambda i: (times[i], i))
+    assert len(sched) == 0
+
+
+@given(data=st.data())
+@settings(**SETTINGS)
+def test_event_heap_cancel_then_run_until_is_consistent(data):
+    """run(until=) interleaved with cancellation: executed count, firing
+    order and the clock's final position all agree with the model."""
+    sched = EventScheduler()
+    fired = []
+    n = data.draw(st.integers(1, 60))
+    ts = [data.draw(st.sampled_from([0.0, 1.0, 2.0, 3.0, 4.0]))
+          for _ in range(n)]
+    handles = [sched.at(t, lambda i=i: fired.append(i))
+               for i, t in enumerate(ts)]
+    cancelled = set()
+    for i in range(n):
+        if data.draw(st.booleans()):
+            handles[i].cancel()
+            cancelled.add(i)
+    until = data.draw(st.sampled_from([0.5, 1.5, 2.5, 5.0]))
+    ran = sched.run(until=until)
+    live = [i for i in range(n) if i not in cancelled]
+    expect_now = [i for i in live if ts[i] <= until]
+    assert ran == len(expect_now)
+    assert fired == sorted(expect_now, key=lambda i: (ts[i], i))
+    assert sched.clock.now() == until    # bounded run covers its window
+    sched.run()
+    assert fired == sorted(expect_now, key=lambda i: (ts[i], i)) + sorted(
+        (i for i in live if ts[i] > until), key=lambda i: (ts[i], i))

@@ -11,10 +11,13 @@ import pytest
 from repro.core import (Broker, ComputeResource, ConsumerGroup,
                         MetricsRegistry, PilotManager, SimClock, WanShaper,
                         as_clock)
+from repro.core.elastic import ScalePolicy
 from repro.core.placement import LinkModel, PlacementEngine
 from repro.sim import PARK, ActorKilled, EventScheduler
 from repro.sim.scenarios import (AUTOENCODER, ISOFOREST, KMEANS,
-                                 FailureSpec, Scenario, format_table,
+                                 DiurnalArrivals, FailureSpec,
+                                 FlashCrowdArrivals, PoissonArrivals,
+                                 Scenario, format_table,
                                  placement_estimates, run_scenario, sweep)
 
 
@@ -143,11 +146,12 @@ def test_actor_sleep_park_resume_and_return():
                         on_exit=lambda a, exc, res: exits.append((exc, res)))
     sched.run(until=2.0)
     assert trace == [("start", 0.0), ("awake", 1.5)]
+    assert sched.clock.now() == 2.0          # run(until=) covers the window
     assert actor.parked and actor.alive
     sched.clock.advance(1.0)
     actor.resume("payload")
     sched.run()
-    assert trace[-1] == ("resumed", 2.5, "payload")
+    assert trace[-1] == ("resumed", 3.0, "payload")
     assert exits == [(None, "done")]
     assert not actor.alive
 
@@ -219,11 +223,14 @@ def test_topic_append_subscriptions():
     sh = WanShaper(bandwidth_bps=8e6, rtt_s=0.1, sleep=False)
     t = b.create_topic("t", n_partitions=2, shaper=sh)
     got = []
-    t.subscribe(lambda p, ready: got.append((p, ready)))
+    cb = lambda p, ready: got.append((p, ready))     # noqa: E731
+    t.subscribe(cb)
+    t.subscribe(cb)                  # double-subscribe is a no-op…
     t.produce(np.zeros(1000, np.float64), partition=1)
-    assert len(got) == 1
+    assert len(got) == 1             # …so the append fires cb exactly once
     assert got[0][0] == 1 and got[0][1] > clock.now()
-    t.unsubscribe(t._subs[0])
+    t.unsubscribe(cb)
+    t.unsubscribe(cb)                # unknown/already-removed: tolerated
     t.produce(np.zeros(10, np.float64), partition=0)
     assert len(got) == 1
 
@@ -456,3 +463,184 @@ def test_metrics_stamps_use_injected_clock():
     assert reg.latencies("produced", "processed") == [3.0]
     assert reg.first_stamp("produced") == 0.0
     assert reg.last_stamp("processed") == 3.0
+
+
+# ---------------------------------------------------------------------------
+# event-loop bugfix pins (PR 6): resume-vs-sleep, run(until=), open loop
+# ---------------------------------------------------------------------------
+
+def test_actor_resume_must_not_rewrite_timed_sleep():
+    """Regression: ``resume()`` during a timed sleep used to *reschedule*
+    the pending wakeup at ``now + delay`` — a stray resume silently moved
+    an actor's alarm clock.  Here the actor sleeps until t=5.0 and a
+    resume lands at t=1.0: pre-fix the actor woke at 1.0 (with the
+    resume's payload delivered into the ``yield 5.0``), post-fix the
+    resume is a no-op and the wakeup stays at 5.0."""
+    sched = EventScheduler()
+    trace = []
+
+    def body():
+        got = yield 5.0
+        trace.append(("awake", sched.clock.now(), got))
+        got = yield PARK                 # parked: resume must work here
+        trace.append(("resumed", sched.clock.now(), got))
+
+    actor = sched.spawn(body())
+    sched.run(until=1.0)
+    assert trace == []                   # still mid-sleep
+    actor.resume("stray")                # would have woken it at 1.0
+    sched.run(until=4.0)
+    assert trace == []                   # old behaviour: ("awake", 1.0, "stray")
+    sched.run(until=6.0)
+    assert trace == [("awake", 5.0, None)]
+    actor.resume("legit")                # parked now: resume is the protocol
+    sched.run()                          # clock sits at 6.0 (until= bound)
+    assert trace[-1] == ("resumed", 6.0, "legit")
+
+
+def test_actor_resume_works_when_idle_on_interpreted_effect():
+    """An actor suspended on an interpreted effect has no pending wakeup:
+    the interpreter's (possibly delayed) ``resume`` must still land."""
+    sched = EventScheduler()
+    out = []
+
+    def interpret(actor, eff):
+        actor.resume(eff["v"] * 10, delay=2.0)
+
+    def body():
+        out.append((yield {"v": 3}))     # non-numeric: routed to interpret
+
+    sched.spawn(body(), interpret=interpret)
+    sched.run()
+    assert out == [30] and sched.clock.now() == 2.0
+
+
+def test_run_until_advances_clock_to_bound_on_drain():
+    """Regression: ``run(until=T)`` that drained the heap early used to
+    leave the clock at the last event's time, so back-to-back bounded
+    runs silently lost the idle tail of each window."""
+    sched = EventScheduler()
+    out = []
+    sched.at(1.0, lambda: out.append(1))
+    sched.run(until=4.0)
+    assert out == [1]
+    assert sched.clock.now() == 4.0      # pre-fix: stuck at 1.0
+    # next event beyond the bound: clock still advances exactly to until
+    sched.at(9.0, lambda: out.append(9))
+    sched.run(until=6.0)
+    assert out == [1] and sched.clock.now() == 6.0
+    sched.run()                          # unbounded: runs the rest
+    assert out == [1, 9] and sched.clock.now() == 9.0
+    # unbounded drain of an empty heap must NOT advance to infinity
+    before = sched.clock.now()
+    sched.run()
+    assert sched.clock.now() == before
+
+
+# ---------------------------------------------------------------------------
+# open-loop arrival processes + per-stage autoscaling (PR 6)
+# ---------------------------------------------------------------------------
+
+def test_arrival_processes_deterministic_sorted_and_sized():
+    for proc in (PoissonArrivals(rate_hz=200.0),
+                 DiurnalArrivals(base_rate_hz=20.0, peak_rate_hz=200.0,
+                                 period_s=10.0),
+                 FlashCrowdArrivals(base_rate_hz=20.0, burst_rate_hz=400.0,
+                                    burst_at_s=1.0, burst_duration_s=0.5)):
+        a = proc.times(500, seed=3)
+        b = proc.times(500, seed=3)
+        assert len(a) == 500
+        assert np.array_equal(a, b)                  # same seed: identical
+        assert np.all(np.diff(a) >= 0.0)             # sorted
+        assert float(a[0]) >= 0.0
+        assert not np.array_equal(a, proc.times(500, seed=4))
+
+
+def test_arrival_process_validation():
+    with pytest.raises(ValueError):
+        PoissonArrivals(rate_hz=0.0)
+    with pytest.raises(ValueError):
+        DiurnalArrivals(base_rate_hz=10.0, peak_rate_hz=5.0, period_s=10.0)
+    with pytest.raises(ValueError):
+        FlashCrowdArrivals(base_rate_hz=10.0, burst_rate_hz=5.0,
+                           burst_at_s=1.0, burst_duration_s=1.0)
+
+
+def test_flash_crowd_concentrates_arrivals_in_burst():
+    proc = FlashCrowdArrivals(base_rate_hz=10.0, burst_rate_hz=1000.0,
+                              burst_at_s=2.0, burst_duration_s=1.0)
+    t = proc.times(400, seed=0)
+    in_burst = int(np.sum((t >= 2.0) & (t < 3.0)))
+    assert in_burst > 200                # the burst dominates the draw
+
+
+def test_open_loop_scenario_paces_traffic_and_is_bit_identical():
+    """Open loop: traffic intensity is the arrival process's, not the
+    pipeline's — the makespan tracks the arrival span instead of
+    collapsing to back-to-back production.  And the whole run stays
+    bit-identical across three executions."""
+    sc = Scenario(model=KMEANS, placement="cloud", wan_band="100mbit",
+                  n_messages=120, n_devices=4, n_points=10, seed=11,
+                  arrival=PoissonArrivals(rate_hz=40.0))
+    span = float(sc.arrival.times(sc.n_messages, sc.seed)[-1])
+    a, b, c = (run_scenario(sc) for _ in range(3))
+    assert a.row() == b.row() == c.row()
+    assert a.n_processed == 120
+    assert a.makespan_s >= 0.8 * span    # paced by arrivals, not drain rate
+    closed = run_scenario(Scenario(model=KMEANS, placement="cloud",
+                                   wan_band="100mbit", n_messages=120,
+                                   n_devices=4, n_points=10, seed=11))
+    assert closed.makespan_s < a.makespan_s
+
+
+def test_per_stage_autoscaling_scales_hot_stage():
+    """A flash crowd through the 3-stage fog pipeline with a per-stage
+    policy on the fog stage: the scaler must react (scale up on the
+    burst), and the run stays deterministic."""
+    sc = Scenario(model=KMEANS, placement="fog", wan_band="100mbit",
+                  n_messages=200, n_devices=4, n_points=1000, seed=5,
+                  arrival=FlashCrowdArrivals(base_rate_hz=20.0,
+                                             burst_rate_hz=1000.0,
+                                             burst_at_s=1.0,
+                                             burst_duration_s=1.0),
+                  autoscale_stages=(
+                      ("process_fog", ScalePolicy(min_workers=2,
+                                                  max_workers=16,
+                                                  lag_high=8,
+                                                  lag_low=1,
+                                                  cooldown_s=0.2)),))
+    a, b = run_scenario(sc), run_scenario(sc)
+    assert a.row() == b.row()
+    assert a.n_processed == 200
+    assert a.row()["autoscale_actions"] > 0
+    ups = [e for e in a.autoscale_events
+           if e["to_workers"] > e["from_workers"]]
+    assert ups                           # the burst forced a scale-up
+
+
+def test_per_stage_autoscaler_rejects_source_stage():
+    from repro.core.executor import SimExecutor
+    from repro.sim.scenarios import build_pipeline
+    sc = Scenario(model=KMEANS, placement="fog", wan_band="100mbit",
+                  n_messages=8, n_devices=2, n_points=10, seed=0)
+    pipe, ex, mgr = build_pipeline(sc)
+    ex.autoscalers = {0: object()}       # stage 0 has no consumer group
+    with pytest.raises(ValueError):
+        pipe.run(n_messages=8, timeout_s=30.0, collect_results=False,
+                 scheduler=ex)
+
+
+def test_arrival_plan_validates_against_run_args():
+    from repro.sim.scenarios import arrival_plan, build_pipeline
+    sc = Scenario(model=KMEANS, placement="cloud", wan_band="100mbit",
+                  n_messages=16, n_devices=4, n_points=10, seed=0,
+                  arrival=PoissonArrivals(rate_hz=100.0))
+    pipe, ex, mgr = build_pipeline(sc)
+    plan = arrival_plan(sc)
+    assert plan is not None and sum(len(p) for p in plan) == 16
+    with pytest.raises(ValueError):      # n_messages disagrees with plan
+        pipe.run(n_messages=15, timeout_s=30.0, collect_results=False,
+                 scheduler=ex, arrival_plan=plan)
+    with pytest.raises(ValueError):      # wrong number of device streams
+        pipe.run(timeout_s=30.0, collect_results=False, scheduler=ex,
+                 arrival_plan=plan[:-1])
