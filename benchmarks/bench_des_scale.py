@@ -1,31 +1,47 @@
-"""Million-event DES scale benchmark: simulator speed as a perf surface.
+"""Million/ten-million-event DES scale benchmark: simulator speed *and
+memory* as tracked perf surfaces.
 
 Drives the *real* ``EdgeToCloudPipeline`` under ``SimExecutor`` with
-open-loop arrival processes (Poisson / diurnal / flash-crowd) and raw
-``bytes`` payloads, so the measured cost is the event loop itself —
-scheduler heap, actor stepping, broker fan-out, poll/wake — not numpy
-serialization.  The headline cell is a 1M-message, 1000-consumer
-Poisson run; the sweep adds diurnal and flash-crowd cells at a tenth
-the size so every arrival process stays on the tracked surface.
+open-loop arrival processes (Poisson / diurnal / flash-crowd / recorded
+trace replay) and raw ``bytes`` payloads, so the measured cost is the
+event loop itself — scheduler heap, actor stepping, broker fan-out,
+poll/wake — not numpy serialization.  The headline cell is the
+full-size Poisson run; the sweep adds diurnal, flash-crowd, and (with
+``--trace``) trace-replay cells at a tenth the size so every arrival
+process stays on the tracked surface.
+
+Memory mode (the 10M-event configuration)::
+
+    PYTHONPATH=src python benchmarks/bench_des_scale.py \\
+        --messages 2500000 --streaming-metrics --truncate-logs 4096 \\
+        --rss --trace benchmarks/traces/azure_functions_like.txt \\
+        --out BENCH_des_scale.json
+
+``--streaming-metrics`` folds message traces into fixed-memory latency
+sketches (``MetricsRegistry(streaming=True)``), ``--truncate-logs N``
+reclaims broker-log prefixes below the committed offsets in batches of
+``N``, and ``--rss`` measures *per-cell* peak RSS (``VmHWM`` reset via
+``/proc/self/clear_refs`` before each cell) instead of the process-
+lifetime high-water mark — together they hold peak RSS flat in run
+length.  ``--max-rss-mb`` turns the headline cell's peak RSS into a
+hard gate (CI's memory ceiling).
 
 Two kinds of numbers per row:
 
 * **deterministic** (virtual time, event counts, latency percentiles,
-  bytes) — bit-identical for a given seed, gated by
-  ``--check-determinism`` (three full sweeps must agree);
-* **wall-clock** (``wall_s``, ``events_per_s``, ``rss_mb``) — the perf
-  trajectory.  These are excluded from the determinism comparison.
+  bytes, truncation counters) — bit-identical for a given seed, gated
+  by ``--check-determinism`` (three full sweeps must agree);
+* **wall-clock** (``wall_s``, ``events_per_s``, ``rss_mb``,
+  ``peak_rss_mb``) — the perf trajectory.  Excluded from the
+  determinism comparison.
 
 The committed ``BENCH_des_scale.json`` records the pre-rework baseline
 (measured on this machine before the event-loop fixes) next to the
-headline events/s, so the speedup is auditable::
-
-    PYTHONPATH=src python benchmarks/bench_des_scale.py \\
-        --check-determinism --out BENCH_des_scale.json
+headline events/s, so the speedup is auditable.
 
 Row shape is pinned by ``benchmarks/BENCH_des_scale.schema.json``
 (validated in CI by ``tools/check_bench_schema.py``; the file is
-uploaded as the ``BENCH_des_scale`` artifact on every run).
+uploaded as a CI artifact on every run).
 """
 from __future__ import annotations
 
@@ -40,7 +56,7 @@ from repro.core.executor import SimExecutor
 from repro.core.monitoring import MetricsRegistry
 from repro.sim.clock import SimClock
 from repro.sim.scenarios import (DiurnalArrivals, FlashCrowdArrivals,
-                                 PoissonArrivals)
+                                 PoissonArrivals, TraceArrivals)
 
 # Pre-rework event-loop throughput, measured on the commit just before
 # the compacting-heap / actor-slot-reuse / waiter-index changes (same
@@ -57,12 +73,12 @@ BASELINE = {
 # row keys compared by --check-determinism (wall-clock keys excluded)
 DETERMINISTIC_KEYS = (
     "arrival", "messages", "devices", "consumers", "payload_bytes",
-    "seed", "processed", "duplicates", "events", "makespan_s",
-    "lat_p50_s", "lat_p95_s", "wan_bytes",
+    "seed", "streaming_metrics", "processed", "duplicates", "events",
+    "truncated_msgs", "makespan_s", "lat_p50_s", "lat_p95_s", "wan_bytes",
 )
 
 
-def _arrival(kind: str, rate_hz: float):
+def _arrival(kind: str, rate_hz: float, trace: str = None):
     if kind == "poisson":
         return PoissonArrivals(rate_hz=rate_hz)
     if kind == "diurnal":
@@ -72,15 +88,46 @@ def _arrival(kind: str, rate_hz: float):
         return FlashCrowdArrivals(base_rate_hz=rate_hz / 4.0,
                                   burst_rate_hz=rate_hz * 4.0,
                                   burst_at_s=2.0, burst_duration_s=2.0)
+    if kind == "trace":
+        if trace is None:
+            raise ValueError("arrival kind 'trace' needs --trace FILE")
+        return TraceArrivals(path=trace)
     raise ValueError(f"unknown arrival kind {kind!r}")
+
+
+def _reset_peak_rss() -> bool:
+    """Reset the kernel's per-process RSS high-water mark (``VmHWM``).
+    Returns False where unsupported (non-Linux/procfs)."""
+    try:
+        with open("/proc/self/clear_refs", "w") as f:
+            f.write("5")
+        return True
+    except OSError:
+        return False
+
+
+def _peak_rss_mb() -> float:
+    """Peak RSS in MB since the last ``_reset_peak_rss`` (``VmHWM``),
+    falling back to the process-lifetime ``ru_maxrss``."""
+    try:
+        with open("/proc/self/status") as f:
+            for line in f:
+                if line.startswith("VmHWM:"):
+                    return int(line.split()[1]) / 1024.0
+    except (OSError, ValueError, IndexError):
+        pass
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
 
 
 def run_cell(*, arrival: str, messages: int, devices: int, consumers: int,
              rate_hz: float, payload_bytes: int, service_s: float,
-             seed: int) -> dict:
+             seed: int, streaming: bool = False, truncate_logs=None,
+             trace: str = None, per_cell_rss: bool = False) -> dict:
     """One open-loop run on the genuine pipeline; returns a bench row."""
+    if per_cell_rss:
+        _reset_peak_rss()
     clock = SimClock()
-    metrics = MetricsRegistry(clock=clock)
+    metrics = MetricsRegistry(clock=clock, streaming=streaming)
     mgr = PilotManager()
     edge = mgr.submit_pilot(ComputeResource(tier="edge", n_workers=devices))
     cloud = mgr.submit_pilot(
@@ -92,8 +139,8 @@ def run_cell(*, arrival: str, messages: int, devices: int, consumers: int,
         process_cloud_function_handler=lambda ctx, data=None: None,
         n_edge_devices=devices, n_partitions=devices,
         cloud_consumers=consumers, topic_name="des-scale",
-        metrics=metrics, clock=clock)
-    times = _arrival(arrival, rate_hz).times(messages, seed)
+        truncate_logs=truncate_logs, metrics=metrics, clock=clock)
+    times = _arrival(arrival, rate_hz, trace).times(messages, seed)
     plan = [times[i::devices] for i in range(devices)]
     ex = SimExecutor(
         clock,
@@ -104,32 +151,45 @@ def run_cell(*, arrival: str, messages: int, devices: int, consumers: int,
     res = pipe.run(timeout_s=float(times[-1]) + 120.0,
                    collect_results=False, scheduler=ex, arrival_plan=plan)
     wall = time.perf_counter() - t0
+    topic_name = pipe._topics[0].name
+    truncated = sum(t.truncated_msgs for t in pipe._topics)
     mgr.release_all()
 
     m = res.metrics
-    lat = m.latencies("produced", "processed")
-    lat.sort()
-    n = len(lat)
+    if streaming:
+        p50 = m.percentile(0.50, "produced", "processed")
+        p95 = m.percentile(0.95, "produced", "processed")
+    else:
+        lat = m.latencies("produced", "processed")
+        lat.sort()
+        n = len(lat)
+        p50 = lat[n // 2] if n else 0.0
+        p95 = lat[min(n - 1, int(0.95 * n))] if n else 0.0
     first = m.first_stamp("produced") or 0.0
     last = m.last_stamp("processed") or first
     events = ex.sched.executed
     # ru_maxrss is the process-lifetime high-water mark (KB on Linux):
-    # monotone across cells, so the largest cell owns the reported peak
+    # monotone across cells, so the largest cell owns the reported peak.
+    # peak_rss_mb is the per-cell VmHWM when --rss reset it above,
+    # otherwise it duplicates the lifetime mark.
     rss_mb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
     return {
         "arrival": arrival, "messages": messages, "devices": devices,
         "consumers": consumers, "payload_bytes": payload_bytes,
         "seed": seed,
+        "streaming_metrics": streaming,
         "processed": res.n_processed,
         "duplicates": int(m.counter("pipeline.duplicates_dropped")),
         "events": events,
+        "truncated_msgs": truncated,
         "makespan_s": max(last - first, 1e-9),
-        "lat_p50_s": lat[n // 2] if n else 0.0,
-        "lat_p95_s": lat[min(n - 1, int(0.95 * n))] if n else 0.0,
-        "wan_bytes": m.counter("topic.des-scale.bytes_in"),
+        "lat_p50_s": p50,
+        "lat_p95_s": p95,
+        "wan_bytes": m.counter(f"topic.{topic_name}.bytes_in"),
         "wall_s": wall,
         "events_per_s": events / max(wall, 1e-9),
         "rss_mb": rss_mb,
+        "peak_rss_mb": _peak_rss_mb() if per_cell_rss else rss_mb,
     }
 
 
@@ -141,17 +201,24 @@ def run_sweep(args) -> list:
         dict(arrival="diurnal", messages=max(args.messages // 10, 1000)),
         dict(arrival="flash", messages=max(args.messages // 10, 1000)),
     ]
+    if args.trace:
+        cells.append(
+            dict(arrival="trace", messages=max(args.messages // 10, 1000)))
     rows = []
     for cell in cells:
         row = run_cell(arrival=cell["arrival"], messages=cell["messages"],
                        devices=args.devices, consumers=args.consumers,
                        rate_hz=args.rate_hz,
                        payload_bytes=args.payload_bytes,
-                       service_s=args.service_s, seed=args.seed)
+                       service_s=args.service_s, seed=args.seed,
+                       streaming=args.streaming_metrics,
+                       truncate_logs=args.truncate_logs,
+                       trace=args.trace, per_cell_rss=args.rss)
         print(f"  {row['arrival']:>8}  {row['messages']:>9,} msgs  "
               f"{row['events']:>9,} events  {row['wall_s']:6.1f} s wall  "
               f"{row['events_per_s']:>9,.0f} ev/s  "
-              f"{row['rss_mb']:6.0f} MB rss")
+              f"{row['peak_rss_mb']:6.0f} MB peak rss  "
+              f"{row['truncated_msgs']:>9,} truncated")
         rows.append(row)
     return rows
 
@@ -160,7 +227,7 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--messages", type=int, default=1_000_000,
                     help="messages in the headline Poisson cell "
-                         "(diurnal/flash cells run a tenth of this)")
+                         "(diurnal/flash/trace cells run a tenth of this)")
     ap.add_argument("--devices", type=int, default=100)
     ap.add_argument("--consumers", type=int, default=1000)
     ap.add_argument("--rate-hz", type=float, default=20_000.0,
@@ -169,6 +236,21 @@ def main(argv=None) -> int:
     ap.add_argument("--service-s", type=float, default=0.001,
                     help="deterministic per-message service charge")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default=None, metavar="FILE",
+                    help="also run a trace-replay cell from this "
+                         "timestamp file (see benchmarks/traces/)")
+    ap.add_argument("--streaming-metrics", action="store_true",
+                    help="MetricsRegistry(streaming=True): sketch-backed "
+                         "percentiles, memory independent of run length")
+    ap.add_argument("--truncate-logs", type=int, default=None, metavar="N",
+                    help="reclaim broker-log prefixes below the committed "
+                         "offsets in batches of N messages")
+    ap.add_argument("--rss", action="store_true",
+                    help="measure per-cell peak RSS (VmHWM reset before "
+                         "each cell) instead of the process-lifetime mark")
+    ap.add_argument("--max-rss-mb", type=float, default=None,
+                    help="fail unless the headline cell's peak RSS stays "
+                         "under this ceiling (CI memory gate)")
     ap.add_argument("--check-determinism", action="store_true",
                     help="run the sweep three times; fail unless every "
                          "deterministic column is identical")
@@ -186,6 +268,15 @@ def main(argv=None) -> int:
           f"{BASELINE['events_per_s']:,.0f} ev/s pre-rework baseline)")
 
     rc = 0
+    if args.max_rss_mb is not None:
+        peak = headline["peak_rss_mb"]
+        if peak > args.max_rss_mb:
+            print(f"peak RSS gate: FAILED — headline cell peaked at "
+                  f"{peak:.0f} MB > {args.max_rss_mb:.0f} MB ceiling")
+            rc = 1
+        else:
+            print(f"peak RSS gate: OK ({peak:.0f} MB <= "
+                  f"{args.max_rss_mb:.0f} MB ceiling)")
     if args.check_determinism:
         def det(rs):
             return [[r[k] for k in DETERMINISTIC_KEYS] for r in rs]
@@ -202,7 +293,10 @@ def main(argv=None) -> int:
             "config": {"messages": args.messages, "devices": args.devices,
                        "consumers": args.consumers, "rate_hz": args.rate_hz,
                        "payload_bytes": args.payload_bytes,
-                       "service_s": args.service_s, "seed": args.seed},
+                       "service_s": args.service_s, "seed": args.seed,
+                       "trace": args.trace,
+                       "streaming_metrics": args.streaming_metrics,
+                       "truncate_logs": args.truncate_logs},
             "baseline": BASELINE,
             "headline": {"events_per_s": headline["events_per_s"],
                          "speedup_vs_baseline": speedup},

@@ -122,11 +122,13 @@ class _Partition:
     def __init__(self):
         self.log: List[Message] = []
         self.ready_at: List[float] = []      # WAN-shaped visibility time
+        self.base = 0                        # absolute offset of log[0]
+        self.truncated = 0                   # messages reclaimed so far
         self.cond = threading.Condition()
 
     def append(self, msg: Message, ready_at: float) -> int:
         with self.cond:
-            msg.offset = len(self.log)
+            msg.offset = self.base + len(self.log)
             # ready_at first: lock-free readers (poll_nowait) gate on
             # len(log), so by the time a message is observable its
             # visibility time is already in place
@@ -140,7 +142,8 @@ class Topic:
     def __init__(self, name: str, n_partitions: int,
                  metrics: MetricsRegistry,
                  shaper: Optional[WanShaper] = None,
-                 clock: Optional[Clock] = None):
+                 clock: Optional[Clock] = None,
+                 truncate_batch: Optional[int] = None):
         self.name = name
         self.partitions = [_Partition() for _ in range(n_partitions)]
         self.metrics = metrics
@@ -153,6 +156,16 @@ class Topic:
         self._subs: Dict[Any, None] = {}
         self._subs_cache: Tuple = ()
         self._subs_lock = threading.Lock()
+        # log truncation (Kafka retention analog): entries strictly below
+        # the minimum committed offset across registered consumer groups
+        # are reclaimed in ``truncate_batch``-sized chunks.  None disables
+        # truncation (the default: logs grow unboundedly, exactly the
+        # pre-truncation behavior, and readers stay lock-free).
+        self.truncate_batch = truncate_batch
+        self._groups: Dict["ConsumerGroup", None] = {}
+        self._groups_cache: Tuple = ()
+        self._trunc_cbs: Dict[Any, None] = {}
+        self._trunc_cbs_cache: Tuple = ()
 
     # -- append notifications ---------------------------------------------
 
@@ -234,15 +247,20 @@ class Topic:
         with part.cond:
             while True:
                 now = self._clock.now()
-                if offset < len(part.log):
-                    ready = part.ready_at[offset]
+                idx = offset - part.base
+                if idx < 0:
+                    raise KeyError(
+                        f"offset {offset} below log start {part.base} of "
+                        f"{self.name}[{partition}] (truncated)")
+                if idx < len(part.log):
+                    ready = part.ready_at[idx]
                     if honor and now < ready:
                         if now >= deadline:
                             return None
                         self._clock.wait(part.cond,
                                          min(ready - now, deadline - now))
                         continue
-                    msg = part.log[offset]
+                    msg = part.log[idx]
                     self.metrics.stamp(
                         msg.msg_id, "broker_out",
                         visible_at=ready)
@@ -259,9 +277,15 @@ class Topic:
         ``(None, ready_at)`` when it exists but is still crossing the WAN
         (retry at ``ready_at``), and ``(None, None)`` when nothing has been
         produced at this offset yet."""
-        # lock-free: append() publishes ready_at before log, and list reads
-        # are atomic under the GIL — the event-driven hot path pays no lock
         part = self.partitions[partition]
+        if self.truncate_batch is not None:
+            # truncation compacts log/ready_at in place under part.cond;
+            # the lock-free index dance below would race with it
+            with part.cond:
+                return self._poll_nowait_at(part, partition, offset)
+        # lock-free: append() publishes ready_at before log, list reads
+        # are atomic under the GIL, and base is pinned at 0 when truncation
+        # is off — the event-driven hot path pays no lock
         log = part.log
         if offset >= len(log):
             return None, None
@@ -272,8 +296,88 @@ class Topic:
         self.metrics.stamp(msg.msg_id, "broker_out", visible_at=ready)
         return msg, None
 
+    def _poll_nowait_at(self, part: _Partition, partition: int, offset: int
+                        ) -> Tuple[Optional[Message], Optional[float]]:
+        """Base-aware fetch; caller holds ``part.cond``."""
+        idx = offset - part.base
+        if idx < 0:
+            raise KeyError(
+                f"offset {offset} below log start {part.base} of "
+                f"{self.name}[{partition}] (truncated)")
+        if idx >= len(part.log):
+            return None, None
+        ready = part.ready_at[idx]
+        if self._honor_visibility() and self._clock.now() < ready:
+            return None, ready
+        msg = part.log[idx]
+        self.metrics.stamp(msg.msg_id, "broker_out", visible_at=ready)
+        return msg, None
+
     def end_offsets(self) -> List[int]:
+        return [p.base + len(p.log) for p in self.partitions]
+
+    def log_start_offsets(self) -> List[int]:
+        """First retained absolute offset per partition (Kafka's
+        ``logStartOffset``); 0 until truncation reclaims a prefix."""
+        return [p.base for p in self.partitions]
+
+    def log_sizes(self) -> List[int]:
+        """Messages currently held in memory per partition."""
         return [len(p.log) for p in self.partitions]
+
+    @property
+    def truncated_msgs(self) -> int:
+        """Total messages reclaimed from this topic's logs."""
+        return sum(p.truncated for p in self.partitions)
+
+    # -- log truncation ----------------------------------------------------
+
+    def _register_group(self, group: "ConsumerGroup") -> None:
+        with self._subs_lock:
+            if group not in self._groups:
+                self._groups[group] = None
+                self._groups_cache = tuple(self._groups)
+
+    def on_truncate(self, fn) -> None:
+        """Register ``fn(partition, msg_ids)`` to fire after a prefix of a
+        partition log is reclaimed, with the reclaimed message ids.  Lets
+        downstream bookkeeping (e.g. dedup sets keyed by msg_id) drop
+        entries for messages that can never be redelivered.  Callbacks run
+        on the committing thread/event and must not block."""
+        with self._subs_lock:
+            if fn not in self._trunc_cbs:
+                self._trunc_cbs[fn] = None
+                self._trunc_cbs_cache = tuple(self._trunc_cbs)
+
+    def maybe_truncate(self, partition: int) -> int:
+        """Reclaim the partition-log prefix below the group-minimum
+        committed offset, if it has reached ``truncate_batch`` messages.
+        Returns the number of messages reclaimed (0 when truncation is
+        disabled, the batch threshold is not met, or no group exists —
+        with no groups nothing is safely consumable, so nothing is
+        dropped).  Absolute offsets are preserved: ``log[0]`` simply moves
+        to ``base``, and a read below ``base`` raises."""
+        if self.truncate_batch is None:
+            return 0
+        groups = self._groups_cache
+        if not groups:
+            return 0
+        # int list reads are GIL-atomic; a stale value only under-truncates
+        safe = min(g.committed[partition] for g in groups)
+        part = self.partitions[partition]
+        with part.cond:
+            reclaim = safe - part.base
+            if reclaim < self.truncate_batch:
+                return 0
+            reclaimed_ids = [m.msg_id for m in part.log[:reclaim]]
+            del part.log[:reclaim]
+            del part.ready_at[:reclaim]
+            part.base = safe
+            part.truncated += reclaim
+        self.metrics.incr(f"topic.{self.name}.truncated_msgs", reclaim)
+        for fn in self._trunc_cbs_cache:
+            fn(partition, reclaimed_ids)
+        return reclaim
 
 
 class ConsumerGroup:
@@ -290,7 +394,12 @@ class ConsumerGroup:
         self.group_id = group_id
         self._clock = topic._clock
         self._lock = threading.Lock()
-        self.committed = [0] * topic.n_partitions
+        # a new group starts at the log-start offsets: everything still
+        # retained replays (Kafka auto.offset.reset=earliest), truncated
+        # prefixes are gone by definition.  Registration makes this
+        # group's committed offsets part of the truncation safety bound.
+        self.committed = list(topic.log_start_offsets())
+        topic._register_group(self)
         # dict-keyed membership: O(1) join/leave at 1000s of consumers
         # (insertion-ordered, so round-robin assignment is deterministic)
         self._members: Dict[str, None] = {}
@@ -340,7 +449,7 @@ class ConsumerGroup:
                 with self._lock:
                     off = self.committed[p]
                 end = self.topic.partitions[p]
-                if off < len(end.log):
+                if off < end.base + len(end.log):
                     msg = self.topic.poll(p, off, timeout_s=0.01)
                     if msg is not None:
                         self.topic.metrics.stamp(msg.msg_id, "consumed",
@@ -374,6 +483,9 @@ class ConsumerGroup:
         with self._lock:
             self.committed[msg.partition] = max(
                 self.committed[msg.partition], msg.offset + 1)
+        # outside the group lock: truncation takes partition locks and may
+        # fire on_truncate callbacks into downstream bookkeeping
+        self.topic.maybe_truncate(msg.partition)
 
     def lag(self) -> int:
         ends = self.topic.end_offsets()
@@ -395,12 +507,13 @@ class Broker:
         self._lock = threading.Lock()
 
     def create_topic(self, name: str, n_partitions: int = 1,
-                     shaper: Optional[WanShaper] = None) -> Topic:
+                     shaper: Optional[WanShaper] = None,
+                     truncate_batch: Optional[int] = None) -> Topic:
         with self._lock:
             if name in self._topics:
                 raise ValueError(f"topic {name!r} exists")
             t = Topic(name, n_partitions, self.metrics, shaper,
-                      clock=self._clock)
+                      clock=self._clock, truncate_batch=truncate_batch)
             self._topics[name] = t
             return t
 

@@ -658,6 +658,7 @@ class _SimRun:
                "actor": None, "ctx": None, "wait": None, "svc": None,
                "pollwait": None,                  # reusable _PollWait slot
                "helping": None,
+               "sleep_until": 0.0,   # framework-scheduled wake (timed sleep)
                "last_beat": self.clock.now(), "exit_reason": None}
         self.tasks[rec["task_id"]] = rec
         if kind == "consumer":
@@ -713,7 +714,12 @@ class _SimRun:
     def _interpret(self, rec: dict, actor, eff: Any) -> None:
         self._beat(rec)
         if isinstance(eff, Sleep):
-            actor.resume(None, delay=max(eff.seconds, 0.0))
+            # a timed sleep is framework-scheduled, not hung: record the
+            # wake time so the monitor leaves the actor alone (open-loop
+            # trace replay sleeps out arbitrarily long arrival gaps)
+            delay = max(eff.seconds, 0.0)
+            rec["sleep_until"] = self.clock.now() + delay
+            actor.resume(None, delay=delay)
             return
         if isinstance(eff, Service):
             model = self.ex.service_model
@@ -722,7 +728,9 @@ class _SimRun:
             if self.speculation is not None and secs > 0.0:
                 self._begin_service(rec, actor, eff, max(secs, 0.0))
                 return
-            actor.resume(None, delay=max(secs, 0.0))
+            secs = max(secs, 0.0)
+            rec["sleep_until"] = self.clock.now() + secs
+            actor.resume(None, delay=secs)
             return
         if isinstance(eff, Poll):
             self._attempt_poll(rec, actor, eff)
@@ -1043,6 +1051,7 @@ class _SimRun:
                 self._cancel_service(rec)
                 self._abort_lend(rec)
                 self._release_inflight(rec)
+                rec["sleep_until"] = 0.0   # dark node: no known wake
             else:
                 rec["exit_reason"] = "crash"
                 rec["actor"].kill()
@@ -1069,6 +1078,8 @@ class _SimRun:
             if rec["helping"] is not None:     # lent to a backup race —
                 continue                       # framework-busy, not hung
             if rec["actor"] is None:           # between retry launches
+                continue
+            if rec["sleep_until"] > now:       # timed sleep, known wake
                 continue
             if now - rec["last_beat"] > self.heartbeat_timeout_s:
                 rec["actor"].drop()

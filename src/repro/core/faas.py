@@ -166,6 +166,7 @@ class ContinuumPipeline:
                  max_retries: int = 2,
                  speculative_factor: float = 0.0,
                  heartbeat_timeout_s: float = 30.0,
+                 truncate_logs: Optional[int] = None,
                  clock: Optional[Clock] = None):
         if len(stages) < 2:
             raise ValueError("a pipeline needs a source stage and at "
@@ -216,6 +217,13 @@ class ContinuumPipeline:
                                 speculative_factor=speculative_factor,
                                 heartbeat_timeout_s=heartbeat_timeout_s,
                                 clock=self._clock)
+        # broker-log retention: reclaim hop-topic prefixes below the
+        # group-minimum committed offset in batches of this many messages
+        # (None = keep everything, the historical behavior).  Reclaimed
+        # msg_ids are also evicted from the per-hop dedup sets, so pipeline
+        # memory stays bounded — at the cost of windowed (not run-long)
+        # duplicate suppression; see README "DES at 10M".
+        self.truncate_logs = truncate_logs
         self._topics: List[Topic] = []
         self._topic: Optional[Topic] = None
         self._group: Optional[ConsumerGroup] = None
@@ -481,14 +489,25 @@ class ContinuumPipeline:
         run_id = next(_run_ids)
         topics: List[Topic] = []
         groups: List[ConsumerGroup] = []
+        seen: List[set] = []
+        lock = threading.Lock()
         for i, stage in enumerate(self.stages[1:], start=1):
             suffix = "" if i == 1 else f"-h{i - 1}"
             topics.append(self.broker.create_topic(
                 f"{self.topic_name}-{run_id}{suffix}",
                 n_partitions=self.n_partitions,
-                shaper=self._shapers[i - 1]))
+                shaper=self._shapers[i - 1],
+                truncate_batch=self.truncate_logs))
             groups.append(ConsumerGroup(topics[-1],
                                         group_id=f"{stage.name}-group"))
+            seen.append(set())
+            if self.truncate_logs is not None:
+                # a reclaimed message can never be redelivered, so its
+                # dedup entry is dead weight — evict it.  This bounds the
+                # other linear memory term (hop dedup sets) and narrows
+                # exactly-once *effect* to the retention window.
+                topics[-1].on_truncate(
+                    self._make_dedup_evictor(seen[-1], lock))
         # paper: messages split across devices, one partition per device
         n_src = self.stage_tasks(0)
         arrivals = self._arrival_plan
@@ -509,9 +528,19 @@ class ContinuumPipeline:
         self._run_groups = groups
         return _RunState(topics=topics, groups=groups,
                          per_device=per_device,
-                         seen=[set() for _ in groups],
+                         seen=seen, lock=lock,
                          n_messages=n_messages, timeout_s=timeout_s,
                          collect=collect_results, arrivals=arrivals)
+
+    @staticmethod
+    def _make_dedup_evictor(seen: set, lock: threading.Lock):
+        """Truncation callback: drop dedup entries of reclaimed msg_ids
+        (they can never be redelivered). ``lock`` is the run state's lock
+        guarding ``seen``."""
+        def _evict(partition: int, msg_ids: List[str]) -> None:
+            with lock:
+                seen.difference_update(msg_ids)
+        return _evict
 
     def _finish(self, state: _RunState, wall_s: float) -> PipelineResult:
         self._group = None        # current_lag() reads 0 between runs
@@ -638,6 +667,7 @@ class EdgeToCloudPipeline(ContinuumPipeline):
                  max_retries: int = 2,
                  speculative_factor: float = 0.0,
                  heartbeat_timeout_s: float = 30.0,
+                 truncate_logs: Optional[int] = None,
                  clock: Optional[Clock] = None):
         self.pilot_edge = pilot_edge
         self.pilot_cloud = pilot_cloud_processing
@@ -661,7 +691,8 @@ class EdgeToCloudPipeline(ContinuumPipeline):
             placement_engine=placement_engine, metrics=metrics,
             max_retries=max_retries,
             speculative_factor=speculative_factor,
-            heartbeat_timeout_s=heartbeat_timeout_s, clock=clock)
+            heartbeat_timeout_s=heartbeat_timeout_s,
+            truncate_logs=truncate_logs, clock=clock)
         # process_edge is hot-swappable like a stage even though it runs
         # fused into the source body (legacy API)
         self._fns["process_edge"] = process_edge_function_handler

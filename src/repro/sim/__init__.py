@@ -28,7 +28,9 @@ from repro.sim.scheduler import PARK, Actor, ActorKilled, EventScheduler
 _SCENARIO_NAMES = ("ModelSpec", "Scenario", "ScenarioResult", "FailureSpec",
                    "WAN_BANDS", "KMEANS", "AUTOENCODER", "ISOFOREST",
                    "MODELS", "PLACEMENTS", "model_specs", "run_scenario",
-                   "sweep", "format_table")
+                   "sweep", "format_table",
+                   "ArrivalProcess", "PoissonArrivals", "DiurnalArrivals",
+                   "FlashCrowdArrivals", "TraceArrivals", "arrival_plan")
 # SimExecutor lives in repro.core.executor (it drives the real pipeline);
 # re-exported here lazily because repro.core imports repro.sim.clock.
 _EXECUTOR_NAMES = ("SimExecutor", "ThreadedExecutor")

@@ -242,6 +242,57 @@ class FlashCrowdArrivals(ArrivalProcess):
         return self._thin(n, seed, burst, lam)
 
 
+@dataclass(frozen=True)
+class TraceArrivals(ArrivalProcess):
+    """Replay of a *recorded* arrival-timestamp trace — production-shaped
+    load (Azure-Functions / Google-cluster-style) instead of a synthetic
+    process.  File format: one float arrival timestamp (seconds, sorted
+    or not) per line; blank lines and ``#`` header/comment lines are
+    ignored (the committed example under ``benchmarks/traces/`` carries a
+    ``# units=seconds seed=... n=...`` header).  Timestamps are sorted
+    and re-based to start at 0.  When more arrivals are requested than
+    the trace holds it is extended periodically — each repetition
+    shifted by the trace period (last timestamp plus one mean gap) — so
+    the recorded burst structure tiles instead of flat-lining.
+    ``time_scale`` stretches (>1) or compresses (<1) the recorded
+    timeline.  Replay is fully deterministic; ``seed`` is ignored."""
+    path: str
+    time_scale: float = 1.0
+
+    def __post_init__(self):
+        if self.time_scale <= 0.0:
+            raise ValueError("time_scale must be > 0")
+
+    def _load(self) -> np.ndarray:
+        vals: List[float] = []
+        with open(self.path) as f:
+            for line in f:
+                line = line.strip()
+                if not line or line.startswith("#"):
+                    continue
+                vals.append(float(line))
+        if not vals:
+            raise ValueError(f"trace {self.path!r} holds no timestamps")
+        ts = np.sort(np.asarray(vals, np.float64))
+        if not np.isfinite(ts).all():
+            raise ValueError(f"trace {self.path!r} has non-finite "
+                             f"timestamps")
+        return ts - ts[0]
+
+    def times(self, n: int, seed: int) -> np.ndarray:
+        ts = self._load()
+        m = ts.shape[0]
+        if n <= m:
+            out = ts[:n].copy()
+        else:
+            # periodic extension: tile the trace, each repetition shifted
+            # by its period so the last recorded gap wraps to the first
+            period = ts[-1] + (ts[-1] / max(m - 1, 1) if m > 1 else 1.0)
+            reps = -(-n // m)
+            out = np.concatenate([ts + k * period for k in range(reps)])[:n]
+        return out * self.time_scale
+
+
 def arrival_plan(sc: "Scenario") -> Optional[List[np.ndarray]]:
     """The scenario's per-device open-loop arrival plan (None when the
     scenario is closed-loop): one aggregate draw of ``n_messages``

@@ -12,6 +12,7 @@ from repro.core import (AutoScaler, Broker, ComputeResource, ConsumerGroup,
                         ParameterService, Pilot, PilotError, PilotManager,
                         PlacementEngine, ScalePolicy, SimClock, TaskFailed,
                         TaskProfile, TaskRuntime, WanShaper, remesh_restart)
+from repro.core.monitoring import LatencySketch
 
 
 def _drive(clock, fut, step_s=0.5, timeout_s=10.0):
@@ -499,3 +500,264 @@ def test_remesh_restart():
     new_pilot, state = remesh_restart(mgr, p2, 0, restore_fn=restore_fn)
     assert state == {"step": 7}
     assert new_pilot.state == "active"
+
+
+# ---------------------------------------------------------------------------
+# broker log truncation (bounded-memory retention)
+# ---------------------------------------------------------------------------
+
+def test_truncation_reclaims_committed_prefix_keeps_absolute_offsets():
+    b = Broker()
+    t = b.create_topic("t", n_partitions=1, truncate_batch=4)
+    g = ConsumerGroup(t)
+    g.join("c0")
+    for i in range(10):
+        t.produce(np.array([i]))
+    for _ in range(10):
+        g.commit(g.poll("c0", timeout_s=1.0))
+    # 10 committed in batches of 4: two chunks reclaimed, 2 retained
+    assert t.truncated_msgs == 8
+    assert t.log_start_offsets() == [8]
+    assert t.end_offsets() == [10]          # absolute offsets unaffected
+    assert [m.offset for m in t.partitions[0].log] == [8, 9]
+    assert int(t.poll(0, 8).value()[0]) == 8
+    with pytest.raises(KeyError):
+        t.poll(0, 7)                        # below the log start: reclaimed
+    # producing after truncation continues the absolute numbering
+    m = t.produce(np.array([10]))
+    assert m.offset == 10
+
+
+def test_truncation_blocked_until_every_group_commits():
+    """The group-minimum committed offset bounds reclamation: a lagging
+    second group pins the log even though the first has committed all."""
+    b = Broker()
+    t = b.create_topic("t", n_partitions=1, truncate_batch=2)
+    g1 = ConsumerGroup(t, group_id="g1")
+    g2 = ConsumerGroup(t, group_id="g2")
+    g1.join("a")
+    g2.join("b")
+    for i in range(8):
+        t.produce(np.array([i]))
+    for _ in range(8):
+        g1.commit(g1.poll("a", timeout_s=1.0))
+    assert t.truncated_msgs == 0            # g2 still at offset 0
+    for _ in range(8):
+        g2.commit(g2.poll("b", timeout_s=1.0))
+    assert t.truncated_msgs == 8
+    assert t.log_sizes() == [0]
+
+
+def test_truncation_late_group_starts_at_log_start():
+    """Kafka 'earliest' semantics against a truncated log: a group that
+    joins after reclamation starts at the log start (not absolute 0) and
+    replays exactly the retained tail."""
+    b = Broker()
+    t = b.create_topic("t", n_partitions=1, truncate_batch=3)
+    g = ConsumerGroup(t)
+    g.join("c0")
+    for i in range(9):
+        t.produce(np.array([i]))
+    for _ in range(7):
+        g.commit(g.poll("c0", timeout_s=1.0))
+    assert t.log_start_offsets() == [6]
+    late = ConsumerGroup(t, group_id="late")
+    assert late.committed == [6]
+    late.join("z")
+    got = []
+    for _ in range(3):
+        m = late.poll("z", timeout_s=1.0)
+        got.append(int(m.value()[0]))
+        late.commit(m)
+    assert got == [6, 7, 8]
+    assert late.lag() == 0
+
+
+def test_truncation_callback_reports_reclaimed_msg_ids():
+    b = Broker()
+    t = b.create_topic("t", n_partitions=2, truncate_batch=2)
+    reclaimed = []
+    t.on_truncate(lambda part, ids: reclaimed.append((part, list(ids))))
+    g = ConsumerGroup(t)
+    g.join("c0")
+    produced = [t.produce(np.array([i])) for i in range(8)]
+    for _ in range(8):
+        g.commit(g.poll("c0", timeout_s=1.0))
+    got_ids = {mid for _, ids in reclaimed for mid in ids}
+    assert got_ids == {m.msg_id for m in produced}
+    assert {p for p, _ in reclaimed} == {0, 1}
+
+
+def test_truncation_disabled_and_no_group_cases():
+    b = Broker()
+    # retention off: logs grow, base pinned at 0
+    t0 = b.create_topic("t0", n_partitions=1)
+    g = ConsumerGroup(t0)
+    g.join("c0")
+    for i in range(6):
+        t0.produce(np.array([i]))
+    for _ in range(6):
+        g.commit(g.poll("c0", timeout_s=1.0))
+    assert t0.truncated_msgs == 0
+    assert t0.log_start_offsets() == [0]
+    assert t0.maybe_truncate(0) == 0
+    # retention on but no consumer group yet: nothing is safe to reclaim
+    t1 = b.create_topic("t1", n_partitions=1, truncate_batch=1)
+    t1.produce(np.array([0]))
+    assert t1.maybe_truncate(0) == 0
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_truncation_churn_preserves_at_least_once(seed):
+    """Seed-driven cousin of the hypothesis property test in
+    test_properties.py (which needs the CI image): random poll/commit/
+    crash/rejoin churn against a truncating topic never reclaims an
+    uncommitted offset and still delivers every message at least once."""
+    rng = np.random.default_rng(seed)
+    n_msgs = int(rng.integers(10, 40))
+    n_parts = int(rng.integers(1, 4))
+    batch = int(rng.integers(1, 6))
+    clock = SimClock()
+    b = Broker(clock=clock)
+    t = b.create_topic("t", n_partitions=n_parts, truncate_batch=batch)
+    g = ConsumerGroup(t)
+    consumers = ["c0", "c1"]
+    for c in consumers:
+        g.join(c)
+    for i in range(n_msgs):
+        t.produce(np.array([i]))
+    seen, deliveries = set(), 0
+    alive = list(consumers)
+    for _ in range(40 * n_msgs + 400):
+        starts = t.log_start_offsets()
+        ends = t.end_offsets()
+        for p in range(n_parts):
+            assert starts[p] <= g.committed[p], \
+                "truncation reclaimed an uncommitted offset"
+            assert [m.offset for m in t.partitions[p].log] \
+                == list(range(starts[p], ends[p]))
+        if g.lag() == 0:
+            break
+        if len(alive) < len(consumers) and rng.random() < 0.2:
+            back = [c for c in consumers if c not in alive][0]
+            alive.append(back)
+            g.join(back)
+        cid = alive[int(rng.integers(0, len(alive)))]
+        msg, _ = g.poll_nowait(cid)
+        if msg is None:
+            clock.advance(0.01)
+            continue
+        deliveries += 1
+        seen.add(int(msg.value()[0]))
+        if len(alive) > 1 and rng.random() < 0.25:
+            # crash before the commit: the offset must survive truncation
+            # and be redelivered after the rebalance
+            alive.remove(cid)
+            g.leave(cid)
+        else:
+            g.commit(msg)
+    assert g.lag() == 0
+    assert deliveries >= n_msgs          # at-least-once
+    assert seen == set(range(n_msgs))    # every message delivered, no gaps
+
+
+# ---------------------------------------------------------------------------
+# streaming metrics (bounded-memory sketches)
+# ---------------------------------------------------------------------------
+
+class _Tick:
+    """Bare now() callable with settable time (the seed clock API)."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_streaming_registry_matches_exact_aggregates():
+    """The same stamp stream through exact and streaming registries:
+    counts/first/last/throughput/max agree exactly, percentiles agree to
+    within the sketch's bucket width."""
+    rng = np.random.default_rng(7)
+    lats = rng.lognormal(mean=-2.0, sigma=1.0, size=2000)
+    clocks = (_Tick(), _Tick())
+    exact = MetricsRegistry(clocks[0])
+    stream = MetricsRegistry(clocks[1], streaming=True)
+    for i, lat in enumerate(lats):
+        for clk, m in zip(clocks, (exact, stream)):
+            clk.t = i * 0.01
+            m.stamp(f"m{i}", "produced", bytes=100.0)
+            clk.t = i * 0.01 + float(lat)
+            m.stamp(f"m{i}", "processed", bytes=100.0)
+    assert stream.pending_traces == 0          # all retired at `processed`
+    assert stream.retired_traces == len(lats)
+    se, ss = exact.summary(), stream.summary()
+    assert se["count"] == ss["count"] == len(lats)
+    np.testing.assert_allclose(ss["mean_s"], se["mean_s"], rtol=1e-9)
+    assert ss["max_s"] == se["max_s"]
+    for q in (0.5, 0.9, 0.95, 0.99):
+        np.testing.assert_allclose(stream.percentile(q),
+                                   exact.percentile(q), rtol=0.04)
+    for ev in ("produced", "processed"):
+        assert stream.event_count(ev) == exact.event_count(ev)
+        assert stream.first_stamp(ev) == exact.first_stamp(ev)
+        assert stream.last_stamp(ev) == exact.last_stamp(ev)
+        assert stream.throughput(ev) == exact.throughput(ev)
+
+
+def test_streaming_registry_refuses_per_message_views():
+    m = MetricsRegistry(streaming=True)
+    m.stamp("a", "produced")
+    m.stamp("a", "processed")
+    with pytest.raises(RuntimeError):
+        m.latencies()
+
+
+def test_latency_sketch_percentile_bounds():
+    rng = np.random.default_rng(3)
+    xs = rng.exponential(scale=0.1, size=5000)
+    sk = LatencySketch()
+    for x in xs:
+        sk.add(float(x))
+    assert sk.count == len(xs)
+    assert sk.percentile(0.0) == float(np.min(xs))     # exact extremes
+    assert sk.percentile(1.0) == float(np.max(xs))
+    srt = np.sort(xs)
+    for q in (0.25, 0.5, 0.75, 0.95, 0.99):
+        est = sk.percentile(q)
+        ref = float(srt[min(len(xs) - 1, int(q * len(xs)))])
+        assert ref <= est <= ref * (1.0 + 2 * 10 ** (1 / sk.PER_DECADE))
+        np.testing.assert_allclose(est, ref, rtol=0.04)
+    empty = LatencySketch()
+    assert empty.percentile(0.5) == 0.0
+
+
+def test_streaming_fifo_window_bounds_pending_traces():
+    """Traces that never reach `processed` (intermediate hops) leave
+    through the max_pending FIFO window instead of accumulating."""
+    m = MetricsRegistry(streaming=True, max_pending=10)
+    for i in range(100):
+        m.stamp(f"m{i}", "produced")
+    assert m.pending_traces == 10
+    assert m.retired_traces == 90
+    # produced-only traces have no spans: nothing lands in the sketches
+    assert m.summary() == {"count": 0}
+    # ...but their event stats were still counted at the stamp
+    assert m.event_count("produced") == 100
+
+
+def test_pipeline_streaming_metrics_and_truncation_end_to_end():
+    """The real threaded pipeline with bounded-memory both ways on:
+    sketch-backed metrics and broker-log retention. Everything still
+    processes, the summary comes off the sketches, and the topic log was
+    actually reclaimed while the run was in flight."""
+    m = MetricsRegistry(streaming=True)
+    pipe = _mini_pipeline(metrics=m, truncate_logs=8)
+    res = pipe.run(n_messages=40, timeout_s=30)
+    assert res.n_processed == 40
+    assert res.metrics.summary()["count"] == 40
+    assert res.metrics.percentile(0.95) > 0.0
+    assert sum(t.truncated_msgs for t in pipe._topics) > 0
+    with pytest.raises(RuntimeError):
+        res.metrics.latencies()

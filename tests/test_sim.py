@@ -2,6 +2,7 @@
 behaviour under virtual time, scenario determinism, and the Fig-3 golden
 placement results (k-means is transfer-bound, autoencoders are
 compute-bound).  Everything here runs in milliseconds of wall time."""
+import os
 import threading
 import time
 
@@ -17,8 +18,12 @@ from repro.sim import PARK, ActorKilled, EventScheduler
 from repro.sim.scenarios import (AUTOENCODER, ISOFOREST, KMEANS,
                                  DiurnalArrivals, FailureSpec,
                                  FlashCrowdArrivals, PoissonArrivals,
-                                 Scenario, format_table,
+                                 Scenario, TraceArrivals, format_table,
                                  placement_estimates, run_scenario, sweep)
+
+TRACE_FILE = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "benchmarks", "traces",
+    "azure_functions_like.txt")
 
 
 # ---------------------------------------------------------------------------
@@ -572,6 +577,63 @@ def test_flash_crowd_concentrates_arrivals_in_burst():
     t = proc.times(400, seed=0)
     in_burst = int(np.sum((t >= 2.0) & (t < 3.0)))
     assert in_burst > 200                # the burst dominates the draw
+
+
+def test_trace_arrivals_replays_committed_trace_deterministically():
+    proc = TraceArrivals(path=TRACE_FILE)
+    a = proc.times(500, seed=3)
+    assert len(a) == 500
+    assert float(a[0]) == 0.0                    # re-based to start at 0
+    assert np.all(np.diff(a) >= 0.0)             # sorted
+    # replay, not a random draw: the seed is ignored by design
+    assert np.array_equal(a, proc.times(500, seed=4))
+
+
+def test_trace_arrivals_parses_comments_sorts_and_rebases(tmp_path):
+    p = tmp_path / "trace.txt"
+    p.write_text("# header\n\n7.5\n3.0\n# comment\n5.0\n")
+    t = TraceArrivals(path=str(p)).times(3, seed=0)
+    np.testing.assert_allclose(t, [0.0, 2.0, 4.5])
+
+
+def test_trace_arrivals_periodic_extension_and_time_scale(tmp_path):
+    p = tmp_path / "trace.txt"
+    p.write_text("0.0\n1.0\n4.0\n")
+    proc = TraceArrivals(path=str(p))
+    # period = last + mean gap = 4.0 + 2.0: repetitions tile at 6.0
+    t = proc.times(7, seed=0)
+    np.testing.assert_allclose(t, [0.0, 1.0, 4.0,
+                                   6.0, 7.0, 10.0,
+                                   12.0])
+    np.testing.assert_allclose(
+        TraceArrivals(path=str(p), time_scale=0.5).times(3, seed=0),
+        [0.0, 0.5, 2.0])
+
+
+def test_trace_arrivals_validation(tmp_path):
+    with pytest.raises(ValueError):
+        TraceArrivals(path=TRACE_FILE, time_scale=0.0)
+    empty = tmp_path / "empty.txt"
+    empty.write_text("# nothing but headers\n\n")
+    with pytest.raises(ValueError):
+        TraceArrivals(path=str(empty)).times(1, seed=0)
+    bad = tmp_path / "bad.txt"
+    bad.write_text("1.0\nnan\n")
+    with pytest.raises(ValueError):
+        TraceArrivals(path=str(bad)).times(2, seed=0)
+
+
+def test_trace_driven_scenario_is_bit_identical():
+    """The full DES driven by the committed recorded trace: open-loop
+    replay paces the run to the trace's span and stays bit-identical."""
+    sc = Scenario(model=KMEANS, placement="cloud", wan_band="100mbit",
+                  n_messages=40, n_devices=4, n_points=10, seed=11,
+                  arrival=TraceArrivals(path=TRACE_FILE))
+    span = float(sc.arrival.times(sc.n_messages, sc.seed)[-1])
+    a, b = run_scenario(sc), run_scenario(sc)
+    assert a.row() == b.row()
+    assert a.n_processed == 40
+    assert a.makespan_s >= 0.8 * span    # paced by the recorded trace
 
 
 def test_open_loop_scenario_paces_traffic_and_is_bit_identical():
