@@ -46,7 +46,10 @@ uploaded as a CI artifact on every run).
 from __future__ import annotations
 
 import argparse
+import cProfile
+import io
 import json
+import pstats
 import resource
 import sys
 import time
@@ -55,8 +58,8 @@ from repro.core import ComputeResource, EdgeToCloudPipeline, PilotManager
 from repro.core.executor import SimExecutor
 from repro.core.monitoring import MetricsRegistry
 from repro.sim.clock import SimClock
-from repro.sim.scenarios import (DiurnalArrivals, FlashCrowdArrivals,
-                                 PoissonArrivals, TraceArrivals)
+from repro.sim.scenarios import arrival_process
+from repro.sim.shard import run_scale_sharded
 
 # Pre-rework event-loop throughput, measured on the commit just before
 # the compacting-heap / actor-slot-reuse / waiter-index changes (same
@@ -78,21 +81,21 @@ DETERMINISTIC_KEYS = (
 )
 
 
+# row keys that must be bit-identical between the single-process and
+# sharded runs of the same cell (--shard-parity); "events" is excluded:
+# each shard runs its own monitor ticks, so the *scheduler* event count
+# differs even though every message-level column is identical
+PARITY_KEYS = (
+    "processed", "duplicates", "truncated_msgs", "makespan_s",
+    "lat_p50_s", "lat_p95_s", "wan_bytes",
+)
+
+
 def _arrival(kind: str, rate_hz: float, trace: str = None):
-    if kind == "poisson":
-        return PoissonArrivals(rate_hz=rate_hz)
-    if kind == "diurnal":
-        return DiurnalArrivals(base_rate_hz=rate_hz / 4.0,
-                               peak_rate_hz=rate_hz, period_s=20.0)
-    if kind == "flash":
-        return FlashCrowdArrivals(base_rate_hz=rate_hz / 4.0,
-                                  burst_rate_hz=rate_hz * 4.0,
-                                  burst_at_s=2.0, burst_duration_s=2.0)
-    if kind == "trace":
-        if trace is None:
-            raise ValueError("arrival kind 'trace' needs --trace FILE")
-        return TraceArrivals(path=trace)
-    raise ValueError(f"unknown arrival kind {kind!r}")
+    # the bench's arrival parameters live in repro.sim.scenarios so the
+    # sharded runner draws the *same* streams (shard parity depends on
+    # bit-identical arrival times)
+    return arrival_process(kind, rate_hz, trace)
 
 
 def _reset_peak_rss() -> bool:
@@ -223,6 +226,52 @@ def run_sweep(args) -> list:
     return rows
 
 
+def run_profile(args, out_path: str = "PROFILE_des.txt") -> None:
+    """cProfile a reduced headline cell and report the top-25 functions
+    by cumulative time — the single-thread hot-loop map that guided the
+    lock-elision / attribute-hoisting squeeze.  Prints to stdout and
+    writes the same table to ``out_path`` (a CI artifact)."""
+    messages = min(args.messages, 30_000)
+    prof = cProfile.Profile()
+    prof.enable()
+    run_cell(arrival="poisson", messages=messages, devices=args.devices,
+             consumers=args.consumers, rate_hz=args.rate_hz,
+             payload_bytes=args.payload_bytes, service_s=args.service_s,
+             seed=args.seed, streaming=args.streaming_metrics,
+             truncate_logs=args.truncate_logs)
+    prof.disable()
+    buf = io.StringIO()
+    stats = pstats.Stats(prof, stream=buf)
+    stats.sort_stats("cumulative").print_stats(25)
+    table = buf.getvalue()
+    header = (f"cProfile of one reduced headline cell "
+              f"({messages:,} msgs / {args.devices} devices / "
+              f"{args.consumers} consumers), top 25 by cumulative time\n")
+    print(f"\n{header}{table}")
+    with open(out_path, "w") as f:
+        f.write(header + table)
+    print(f"wrote {out_path}")
+
+
+def run_sharded(args) -> dict:
+    """The sharded headline cell: same messages/seed/arrival as the
+    single-process headline, split ``--shards`` ways."""
+    row = run_scale_sharded(
+        arrival="poisson", messages=args.messages, devices=args.devices,
+        consumers=args.consumers, rate_hz=args.rate_hz,
+        payload_bytes=args.payload_bytes, service_s=args.service_s,
+        seed=args.seed, shards=args.shards,
+        streaming=args.streaming_metrics,
+        truncate_logs=args.truncate_logs, mode=args.shard_mode)
+    print(f"  sharded x{row['shards']} ({row['mode']}):  "
+          f"{row['messages']:>9,} msgs  {row['events']:>9,} events  "
+          f"{row['wall_s']:6.1f} s wall  "
+          f"{row['agg_events_per_s']:>9,.0f} ev/s aggregate  "
+          f"({row['cpu_critical_s']:.1f} s critical-path cpu, "
+          f"{row['windows']} window(s))")
+    return row
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--messages", type=int, default=1_000_000,
@@ -254,8 +303,24 @@ def main(argv=None) -> int:
     ap.add_argument("--check-determinism", action="store_true",
                     help="run the sweep three times; fail unless every "
                          "deterministic column is identical")
+    ap.add_argument("--profile", action="store_true",
+                    help="cProfile a reduced headline cell first: top-25 "
+                         "cumulative functions to stdout + PROFILE_des.txt")
+    ap.add_argument("--shards", type=int, default=0, metavar="N",
+                    help="also run the headline cell sharded N ways "
+                         "(conservative time-window parallel DES)")
+    ap.add_argument("--shard-mode", choices=("mp", "inline"), default="mp",
+                    help="sharded run backend: one OS process per shard "
+                         "(mp) or sequential in-process (inline)")
+    ap.add_argument("--shard-parity", action="store_true",
+                    help="fail unless the sharded run's deterministic "
+                         "columns are bit-identical to the single-process "
+                         "headline cell")
     ap.add_argument("--out", default=None, help="write the report as JSON")
     args = ap.parse_args(argv)
+
+    if args.profile:
+        run_profile(args)
 
     t0 = time.perf_counter()
     rows = run_sweep(args)
@@ -268,6 +333,28 @@ def main(argv=None) -> int:
           f"{BASELINE['events_per_s']:,.0f} ev/s pre-rework baseline)")
 
     rc = 0
+    sharded = None
+    if args.shards > 0:
+        sharded = run_sharded(args)
+        sharded["parity_vs_single"] = all(
+            sharded[k] == headline[k] for k in PARITY_KEYS)
+        sharded["speedup_vs_single"] = (
+            sharded["agg_events_per_s"] / max(headline["events_per_s"],
+                                              1e-9))
+        print(f"  sharded aggregate speedup: "
+              f"{sharded['speedup_vs_single']:.1f}x the single-process "
+              f"headline rate")
+        if args.shard_parity:
+            if sharded["parity_vs_single"]:
+                print("shard parity: OK (deterministic columns "
+                      "bit-identical to the single-process headline)")
+            else:
+                diffs = [f"{k}: single={headline[k]!r} "
+                         f"sharded={sharded[k]!r}"
+                         for k in PARITY_KEYS
+                         if sharded[k] != headline[k]]
+                print("shard parity: FAILED — " + "; ".join(diffs))
+                rc = 1
     if args.max_rss_mb is not None:
         peak = headline["peak_rss_mb"]
         if peak > args.max_rss_mb:
@@ -296,12 +383,15 @@ def main(argv=None) -> int:
                        "service_s": args.service_s, "seed": args.seed,
                        "trace": args.trace,
                        "streaming_metrics": args.streaming_metrics,
-                       "truncate_logs": args.truncate_logs},
+                       "truncate_logs": args.truncate_logs,
+                       "shards": args.shards},
             "baseline": BASELINE,
             "headline": {"events_per_s": headline["events_per_s"],
                          "speedup_vs_baseline": speedup},
             "rows": rows,
         }
+        if sharded is not None:
+            report["sharded"] = sharded
         with open(args.out, "w") as f:
             json.dump(report, f, indent=1, default=float)
         print(f"wrote {args.out} ({total_wall:.1f} s total)")

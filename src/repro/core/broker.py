@@ -137,6 +137,16 @@ class _Partition:
             self.cond.notify_all()
             return msg.offset
 
+    def append_unlocked(self, msg: Message, ready_at: float) -> int:
+        """Single-owner append: no condition lock, no notify.  Only valid
+        when one thread owns the whole broker (``Topic.single_owner``) —
+        nobody blocks in ``poll`` then, so the notify is dead weight and
+        the lock pure overhead."""
+        msg.offset = self.base + len(self.log)
+        self.ready_at.append(ready_at)
+        self.log.append(msg)
+        return msg.offset
+
 
 class Topic:
     def __init__(self, name: str, n_partitions: int,
@@ -148,6 +158,12 @@ class Topic:
         self.partitions = [_Partition() for _ in range(n_partitions)]
         self.metrics = metrics
         self.shaper = shaper
+        # single-owner mode: set by the DES executor when exactly one
+        # thread drives every producer/consumer of this topic.  Elides the
+        # partition condition locks on the append / locked-poll / truncate
+        # paths (the locked poll_nowait variant the truncation feature
+        # added is the profiled hot spot this removes).
+        self.single_owner = False
         self._clock = as_clock(clock)
         self._rr = itertools.count()
         # dict-keyed (insertion-ordered) so subscribe is idempotent and
@@ -225,12 +241,43 @@ class Topic:
             if self.shaper.sleep and delay > 0:
                 self._clock.sleep(delay)
                 delay = 0.0
-        self.partitions[partition].append(msg, now + delay)
+        part = self.partitions[partition]
+        if self.single_owner:
+            part.append_unlocked(msg, now + delay)
+        else:
+            part.append(msg, now + delay)
         self.metrics.stamp(msg_id, "broker_in", wan_delay_s=delay)
         self.metrics.incr(f"topic.{self.name}.bytes_in", msg.nbytes)
         self.metrics.incr(f"topic.{self.name}.msgs_in")
         for fn in self._subs_cache:     # immutable snapshot: no lock/copy
             fn(partition, now + delay)
+        return msg
+
+    def inject(self, raw: bytes, *, msg_id: str, partition: int,
+               ready_at: float, key: Optional[str] = None,
+               produced_t: Optional[float] = None) -> Message:
+        """Boundary-queue delivery for sharded DES runs: append an
+        already-serialized message with an explicit visibility time.
+
+        Unlike :meth:`produce` this charges **no** shaper delay and does
+        **not** count ``bytes_in``/``msgs_in``/``broker_in`` — the shard
+        that originally produced the message owns those stamps and
+        counters, so cross-shard traffic is never double-counted.  When
+        ``produced_t`` is given the message's ``produced`` stamp is
+        re-created in this shard's registry at its original time, so
+        end-to-end latency percentiles computed here match an unsharded
+        run."""
+        msg = Message(msg_id=msg_id, key=key, raw=raw, partition=partition)
+        if produced_t is not None:
+            self.metrics.stamp(msg_id, "produced", t=produced_t,
+                               bytes=msg.nbytes, partition=partition)
+        part = self.partitions[partition]
+        if self.single_owner:
+            part.append_unlocked(msg, ready_at)
+        else:
+            part.append(msg, ready_at)
+        for fn in self._subs_cache:
+            fn(partition, ready_at)
         return msg
 
     # -- consumer side -----------------------------------------------------
@@ -279,6 +326,11 @@ class Topic:
         produced at this offset yet."""
         part = self.partitions[partition]
         if self.truncate_batch is not None:
+            if self.single_owner:
+                # single-owner fast path: truncation can only run on this
+                # same thread, so the base-aware read needs no lock — this
+                # elides the locked poll_nowait variant on the DES path
+                return self._poll_nowait_at(part, partition, offset)
             # truncation compacts log/ready_at in place under part.cond;
             # the lock-free index dance below would race with it
             with part.cond:
@@ -365,7 +417,7 @@ class Topic:
         # int list reads are GIL-atomic; a stale value only under-truncates
         safe = min(g.committed[partition] for g in groups)
         part = self.partitions[partition]
-        with part.cond:
+        if self.single_owner:
             reclaim = safe - part.base
             if reclaim < self.truncate_batch:
                 return 0
@@ -374,6 +426,16 @@ class Topic:
             del part.ready_at[:reclaim]
             part.base = safe
             part.truncated += reclaim
+        else:
+            with part.cond:
+                reclaim = safe - part.base
+                if reclaim < self.truncate_batch:
+                    return 0
+                reclaimed_ids = [m.msg_id for m in part.log[:reclaim]]
+                del part.log[:reclaim]
+                del part.ready_at[:reclaim]
+                part.base = safe
+                part.truncated += reclaim
         self.metrics.incr(f"topic.{self.name}.truncated_msgs", reclaim)
         for fn in self._trunc_cbs_cache:
             fn(partition, reclaimed_ids)
@@ -480,9 +542,14 @@ class ConsumerGroup:
         return None, next_ready
 
     def commit(self, msg: Message) -> None:
-        with self._lock:
-            self.committed[msg.partition] = max(
-                self.committed[msg.partition], msg.offset + 1)
+        if self.topic.single_owner:
+            p = msg.partition
+            if msg.offset + 1 > self.committed[p]:
+                self.committed[p] = msg.offset + 1
+        else:
+            with self._lock:
+                self.committed[msg.partition] = max(
+                    self.committed[msg.partition], msg.offset + 1)
         # outside the group lock: truncation takes partition locks and may
         # fire on_truncate callbacks into downstream bookkeeping
         self.topic.maybe_truncate(msg.partition)

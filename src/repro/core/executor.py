@@ -56,7 +56,7 @@ from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
 from repro.core.runtime import TaskContext, TaskRuntime
-from repro.sim.clock import SimClock
+from repro.sim.clock import NULL_LOCK, SimClock
 from repro.sim.scheduler import ActorKilled, EventScheduler
 
 # service_model(stage, ctx, payload) -> seconds of service time to charge
@@ -452,6 +452,21 @@ class _ServiceOp:
         self.primary_ev = self.check_ev = self.backup_ev = None
 
 
+class _NullSemaphore:
+    """No-op semaphore for the single-owner DES path: the DES never
+    blocks on ``processed_sem`` (completion is observed via
+    ``state.stop``), so the per-message release is pure lock traffic."""
+
+    __slots__ = ()
+
+    def release(self, n: int = 1) -> None:
+        pass
+
+    def acquire(self, blocking: bool = True,
+                timeout: Optional[float] = None) -> bool:
+        return True
+
+
 class SimExecutor:
     """Single-threaded DES strategy: the whole pipeline run — producers,
     consumers, WAN visibility, heartbeat monitoring, retries, crash
@@ -521,8 +536,8 @@ class SimExecutor:
         self.speculation: Optional[SpeculationStats] = None
         self.sched: Optional[EventScheduler] = None
 
-    def run(self, pipe, *, n_messages: int, timeout_s: float,
-            collect_results: bool):
+    def _prepare(self, pipe, n_messages: int, timeout_s: float,
+                 collect_results: bool):
         clock = pipe._clock
         if self.clock is None:
             self.clock = clock
@@ -535,8 +550,25 @@ class SimExecutor:
                 "SimExecutor needs the pipeline built on an auto-advance "
                 "SimClock: EdgeToCloudPipeline(..., clock=SimClock())")
         self.sched = EventScheduler(clock)
-        state = pipe._setup_run(n_messages, timeout_s, collect_results)
+        return pipe._setup_run(n_messages, timeout_s, collect_results)
+
+    def run(self, pipe, *, n_messages: int, timeout_s: float,
+            collect_results: bool):
+        state = self._prepare(pipe, n_messages, timeout_s, collect_results)
         return _SimRun(self, pipe, state).execute()
+
+    def begin(self, pipe, *, n_messages: int, timeout_s: float,
+              collect_results: bool) -> "_SimRun":
+        """Windowed entry point (sharded DES): set up and *start* a run —
+        spawn every actor, subscribe topic callbacks — without draining
+        the scheduler.  The caller advances virtual time in bounded
+        windows via ``advance_to(t)`` (conservative time-window
+        synchronization), injects cross-shard boundary messages between
+        windows, and calls ``finish()`` when ``done``."""
+        state = self._prepare(pipe, n_messages, timeout_s, collect_results)
+        run = _SimRun(self, pipe, state)
+        run.start()
+        return run
 
 
 class _SimRun:
@@ -601,9 +633,39 @@ class _SimRun:
 
     # -- lifecycle ---------------------------------------------------------
 
-    def execute(self):
+    def _elide_locks(self) -> None:
+        """Single-owner lock elision: this DES run is the only thread
+        touching its pipeline, broker topics, metrics and run state, so
+        every internal lock on the per-event path is pure overhead (the
+        ``--profile`` mode shows lock acquire/release and the locked
+        ``poll_nowait`` variant as the top non-algorithmic costs).  Real
+        locks are restored in :meth:`finish` so the pipeline objects stay
+        safe for a later threaded run."""
+        state, pipe = self.state, self.pipe
+        state.lock = NULL_LOCK
+        state.processed_sem = _NullSemaphore()
+        pipe._fn_lock = NULL_LOCK
+        self.metrics.elide_lock(True)
+        for topic in state.topics:
+            topic.single_owner = True
+        if self.speculation is not None:
+            self.speculation._lock = NULL_LOCK
+
+    def _restore_locks(self) -> None:
+        self.pipe._fn_lock = threading.Lock()
+        self.metrics.elide_lock(False)
+        self.state.lock = threading.Lock()
+        if self.speculation is not None:
+            self.speculation._lock = threading.Lock()
+
+    def start(self) -> None:
+        """Spawn every actor and periodic tick; events run on the first
+        ``advance_to`` call."""
         pipe, state = self.pipe, self.state
-        t0 = self.clock.now()
+        t0 = self.t0 = self.clock.now()
+        self.deadline = t0 + state.timeout_s
+        self._finished = False
+        self._elide_locks()
         for topic in state.topics:
             cb = (lambda partition, ready_at, topic=topic:
                   self._on_append(topic, partition, ready_at))
@@ -626,13 +688,29 @@ class _SimRun:
                              self._autoscale_tick)
         self.sched.after(self.ex.monitor_interval_s, self._monitor_tick)
 
-        # the whole run is one scheduler call: the loop stays inside
-        # EventScheduler.run (no per-event next_time/step round-trip),
-        # stopping the moment the pipeline reports completion
-        deadline = t0 + state.timeout_s
-        self.sched.run(until=deadline, stop=state.stop.is_set)
+    def advance_to(self, t: float) -> None:
+        """Drain events up to virtual time ``min(t, deadline)``.  On a
+        window that drains early the clock still advances to the window
+        edge (``EventScheduler.run(until=)`` semantics), so every shard
+        observes the same window boundary."""
+        self.sched.run(until=min(t, self.deadline),
+                       stop=self.state.stop.is_set)
+
+    @property
+    def done(self) -> bool:
+        """The run can make no more progress on its own: the pipeline
+        reported completion (``stop``) or no events remain scheduled
+        (an injected boundary message re-arms the scheduler)."""
+        return self.state.stop.is_set() or len(self.sched) == 0
+
+    def finish(self):
+        """Close the run and return its :class:`PipelineResult`."""
+        state = self.state
+        if self._finished:
+            return self._result
+        self._finished = True
         if state.t_done is None:
-            state.t_done = min(self.clock.now(), deadline)
+            state.t_done = min(self.clock.now(), self.deadline)
         state.stop.set()
         for topic, cb in self._subs:
             topic.unsubscribe(cb)
@@ -641,7 +719,20 @@ class _SimRun:
         # wins + losses + cancelled always equals launches
         for rec in list(self.tasks.values()):
             self._cancel_service(rec)
-        return pipe._finish(state, state.t_done - t0)
+        self._restore_locks()
+        self._result = self.pipe._finish(state, state.t_done - self.t0)
+        return self._result
+
+    def execute(self):
+        # the whole run is one scheduler call: the loop stays inside
+        # EventScheduler.run (no per-event next_time/step round-trip),
+        # stopping the moment the pipeline reports completion
+        self.start()
+        try:
+            self.advance_to(self.deadline)
+        finally:
+            result = self.finish()
+        return result
 
     # -- task spawning -----------------------------------------------------
 

@@ -40,7 +40,7 @@ from collections import defaultdict
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
-from repro.sim.clock import as_clock
+from repro.sim.clock import NULL_LOCK, as_clock
 
 
 @dataclass
@@ -136,6 +136,38 @@ class LatencySketch:
                 return min(max(edge, self.min), self.max)
         return self.max              # unreachable (cum ends at count)
 
+    # -- cross-process merging (sharded DES) ------------------------------
+
+    def state(self) -> dict:
+        """Picklable snapshot for shipping a worker's sketch over a pipe."""
+        return {"counts": list(self.counts), "count": self.count,
+                "total": self.total, "min": self.min, "max": self.max}
+
+    @classmethod
+    def from_state(cls, st: dict) -> "LatencySketch":
+        sk = cls()
+        sk.counts = list(st["counts"])
+        sk.count = int(st["count"])
+        sk.total = float(st["total"])
+        sk.min = float(st["min"])
+        sk.max = float(st["max"])
+        return sk
+
+    def merge(self, other: "LatencySketch") -> None:
+        """Fold another sketch in.  Bucket counts, count, min and max merge
+        exactly, so merged percentiles are bit-identical to a single sketch
+        fed the union of values; only ``total`` (hence ``mean``) depends on
+        float summation order."""
+        if len(other.counts) != len(self.counts):
+            raise ValueError("cannot merge sketches with different layouts")
+        self.counts = [a + b for a, b in zip(self.counts, other.counts)]
+        self.count += other.count
+        self.total += other.total
+        if other.min < self.min:
+            self.min = other.min
+        if other.max > self.max:
+            self.max = other.max
+
 
 class _EventStats:
     """Running per-event aggregates (streaming mode): stamp count,
@@ -187,8 +219,21 @@ class MetricsRegistry:
 
     # -- message lifecycle ---------------------------------------------------
 
-    def stamp(self, msg_id: str, event: str, **meta) -> float:
-        t = self._clock()
+    def elide_lock(self, elide: bool = True) -> None:
+        """Swap the registry lock for a no-op (``elide=True``) or restore a
+        real :class:`threading.Lock`.  Only the single-owner DES path may
+        elide: the SimExecutor is the sole thread touching the registry, so
+        the lock acquire/release per stamp (5 stamps/message) is pure
+        overhead there."""
+        self._lock = NULL_LOCK if elide else threading.Lock()
+
+    def stamp(self, msg_id: str, event: str, *,
+              t: Optional[float] = None, **meta) -> float:
+        """Stamp ``event`` on ``msg_id`` at the clock's current time, or at
+        an explicit ``t`` (used by sharded runs to re-stamp a boundary
+        message at its original production time in the receiving shard)."""
+        if t is None:
+            t = self._clock()
         with self._lock:
             tr = self._traces.setdefault(msg_id, MessageTrace(msg_id))
             if self.streaming and event not in tr.stamps:

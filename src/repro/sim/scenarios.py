@@ -293,6 +293,30 @@ class TraceArrivals(ArrivalProcess):
         return out * self.time_scale
 
 
+def arrival_process(kind: str, rate_hz: float,
+                    trace: Optional[str] = None) -> ArrivalProcess:
+    """Shared open-loop arrival-process factory (the scale benchmarks,
+    the geo benchmark and the sharded DES all build the same processes
+    from the same knobs, so their deterministic draws agree): ``poisson``
+    at ``rate_hz``; ``diurnal`` swinging rate_hz/4 ↔ rate_hz over a 20 s
+    period; ``flash`` with a rate_hz/4 background and a 4×rate_hz burst
+    in [2 s, 4 s); ``trace`` replaying the timestamp file at ``trace``."""
+    if kind == "poisson":
+        return PoissonArrivals(rate_hz=rate_hz)
+    if kind == "diurnal":
+        return DiurnalArrivals(base_rate_hz=rate_hz / 4.0,
+                               peak_rate_hz=rate_hz, period_s=20.0)
+    if kind == "flash":
+        return FlashCrowdArrivals(base_rate_hz=rate_hz / 4.0,
+                                  burst_rate_hz=rate_hz * 4.0,
+                                  burst_at_s=2.0, burst_duration_s=2.0)
+    if kind == "trace":
+        if trace is None:
+            raise ValueError("arrival_process('trace', ...) needs trace=")
+        return TraceArrivals(path=trace)
+    raise ValueError(f"unknown arrival kind {kind!r}")
+
+
 def arrival_plan(sc: "Scenario") -> Optional[List[np.ndarray]]:
     """The scenario's per-device open-loop arrival plan (None when the
     scenario is closed-loop): one aggregate draw of ``n_messages``

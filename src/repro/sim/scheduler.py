@@ -161,39 +161,50 @@ class EventScheduler:
         that instant, so ``clock.now()`` reflects it even if no event
         happened to land there.  ``max_events``/``stop`` exits leave the
         clock at the last executed event."""
+        # hot loop: every per-event attribute chain hoisted into locals
+        # (heap, clock.advance_to, heapq.heappop) and the executed counter
+        # accumulated locally, flushed once — at millions of events these
+        # lookups are a measurable slice of the profile
         n = 0
         heap = self._heap
-        clock = self.clock
+        advance_to = self.clock.advance_to
         pop = heapq.heappop
         exhausted = False
-        while heap:
-            if stop is not None and stop():
-                break
-            entry = heap[0]
-            ev = entry[2]
-            if ev.cancelled:
+        try:
+            while heap:
+                if stop is not None and stop():
+                    break
+                entry = heap[0]
+                ev = entry[2]
+                if ev.cancelled:
+                    pop(heap)
+                    self._dead -= 1
+                    continue
+                t = entry[0]
+                if t > until:
+                    exhausted = True
+                    break
                 pop(heap)
-                self._dead -= 1
-                continue
-            t = entry[0]
-            if t > until:
+                self._live -= 1
+                # mark fired before fn() runs: a later cancel() on this
+                # handle must be a no-op (not a counter decrement), and
+                # fn() itself may reschedule() the handle, which clears
+                # the flag for the fresh heap entry
+                ev.cancelled = True
+                advance_to(t)
+                ev.fn()
+                n += 1
+                if max_events is not None and n >= max_events:
+                    break
+            else:
                 exhausted = True
-                break
-            pop(heap)
-            self._live -= 1
-            clock.advance_to(t)
-            ev.fn()
-            n += 1
-            self.executed += 1
-            if max_events is not None and n >= max_events:
-                break
-        else:
-            exhausted = True
+        finally:
+            self.executed += n
         if exhausted and until != math.inf:
             # drained (or next event beyond the horizon): time still
             # passed up to `until` — composed scenarios read clock.now()
             # after run(until=...) and must not see a stale timestamp
-            clock.advance_to(until)
+            advance_to(until)
         return n
 
     def step(self) -> bool:
