@@ -39,7 +39,8 @@ def run_advisories(args):
     reports = [adv.advise(m, placements=args.placements, bands=args.bands,
                           latency_budget=args.latency_budget,
                           wan_budget=args.wan_budget,
-                          hybrid_reduce=args.hybrid_reduce)
+                          hybrid_reduce=args.hybrid_reduce,
+                          metro_bands=args.metro_bands)
                for m in args.models]
     rows = [row for rep in reports for row in rep.rows()]
     return reports, rows
@@ -65,6 +66,10 @@ def main(argv=None) -> int:
     ap.add_argument("--wan-budget", type=float, default=None,
                     help="cap advisory WAN megabytes per cell (same "
                          "filter-then-rank semantics)")
+    ap.add_argument("--metro-bands", nargs="+", default=None,
+                    help="sweep the fog placement's edge->fog metro band "
+                         "(profile metro_bands names), the way --bands "
+                         "sweeps the WAN hop")
     ap.add_argument("--hybrid-reduce", type=int, nargs="+", default=None,
                     help="sweep the hybrid placement's edge "
                          "pre-aggregation factor over these values")

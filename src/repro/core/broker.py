@@ -249,6 +249,13 @@ class Topic:
         self.metrics.stamp(msg_id, "broker_in", wan_delay_s=delay)
         self.metrics.incr(f"topic.{self.name}.bytes_in", msg.nbytes)
         self.metrics.incr(f"topic.{self.name}.msgs_in")
+        if delay > 0.0:
+            # produce-side observation of the shaped hop (queueing + tx +
+            # one-way latency) — what the ReAdvisor watches for link drift.
+            # Only shaped topics ever grow the counter, and every shaped
+            # message carries rtt/2 > 0, so msgs_in deltas are the matching
+            # denominator for a windowed mean.
+            self.metrics.incr(f"topic.{self.name}.wan_delay_s", delay)
         for fn in self._subs_cache:     # immutable snapshot: no lock/copy
             fn(partition, now + delay)
         return msg

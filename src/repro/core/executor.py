@@ -55,6 +55,7 @@ from collections import defaultdict
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
+from repro.core.broker import WanShaper
 from repro.core.runtime import TaskContext, TaskRuntime
 from repro.sim.clock import NULL_LOCK, SimClock
 from repro.sim.scheduler import ActorKilled, EventScheduler
@@ -349,6 +350,57 @@ class ThreadedExecutor:
                                     pipe.stage_cid(si, i))
                 for i in range(pipe.stage_tasks(si)))
 
+        # online re-advisory: a daemon monitor thread ticks the attached
+        # ReAdvisor against the wall clock; a decision re-binds the
+        # watched stage, bumps its placement epoch (old threads drain at
+        # their next poll loop-top) and submits a replacement fleet on a
+        # fresh TaskRuntime bound to the winning pilot
+        rv = pipe._readvise
+        rv_thread = None
+        if rv is not None:
+            rv_si = next(i for i, st in enumerate(pipe.stages)
+                         if st.name == rv.stage)
+            if rv_si == 0:
+                raise ValueError("the source stage cannot be re-advised — "
+                                 "watch a consumer stage")
+            stage_seq = {si: itertools.count(pipe.stage_tasks(si))
+                         for si in range(1, len(pipe.stages))}
+            rv.begin(t0)
+
+            def _rv_loop():
+                while not state.stop.wait(rv.interval_s):
+                    dec = rv.step(
+                        now=clock.now(), metrics=pipe.metrics,
+                        topic=state.topics[rv_si - 1].name,
+                        current_tier=pipe.stages[rv_si].pilot.tier,
+                        src_tier=pipe.stages[rv_si - 1].pilot.tier)
+                    if dec is None:
+                        continue
+                    pipe.metrics.event(
+                        "readvise_decision", stage=pipe.stages[rv_si].name,
+                        from_tier=dec.from_tier, to_tier=dec.to_tier)
+                    if rv.apply_delay_s > 0 and state.stop.wait(
+                            rv.apply_delay_s):
+                        return
+                    pipe.rebind_stage(pipe.stages[rv_si].name,
+                                      rv.pilot_for(dec.to_tier))
+                    with state.lock:
+                        state.stage_epoch[rv_si] = \
+                            state.stage_epoch.get(rv_si, 0) + 1
+                    rt = TaskRuntime(pipe.stages[rv_si].pilot, pipe.metrics,
+                                     interpreter=interpret, **runtime_kw)
+                    runtimes.append(rt)
+                    for _ in range(pipe.stage_tasks(rv_si)):
+                        cid = pipe.stage_cid(rv_si, next(stage_seq[rv_si]))
+                        pipe.metrics.event("consumer_spawned", consumer=cid)
+                        consumer_futs.append(
+                            rt.submit(pipe._stage_body, state, rv_si, cid))
+                    rv.applied(dec, clock.now())
+
+            rv_thread = threading.Thread(target=_rv_loop, daemon=True,
+                                         name="readvise-monitor")
+            rv_thread.start()
+
         # the semaphore wait is real (worker threads are real) but the
         # deadline is measured on the injected clock; with a virtual clock
         # the real wait must stay short so deadline advances (driven from
@@ -366,6 +418,8 @@ class ThreadedExecutor:
         state.stop.set()
         wall = (state.t_done if state.t_done is not None
                 else clock.now()) - t0     # before any shutdown nudging
+        if rv_thread is not None:
+            rv_thread.join(timeout=5.0)
         for f in producer_futs + consumer_futs:
             # with a manual virtual clock, workers may be parked inside
             # clock.sleep waiting for time the external driver will never
@@ -488,6 +542,21 @@ class SimExecutor:
         the consumer mid-run; ``"silent"`` goes dark so the heartbeat
         monitor must detect the loss). ``repro.sim.scenarios.FailureSpec``
         matches this shape.
+    drift_plan: mid-run environment drift events — objects with ``at_s``
+        and ``kind`` (``"band"``: re-price a hop's live
+        :class:`~repro.core.broker.WanShaper` in place —
+        ``hop``/``bandwidth_bps``/``rtt_s``; ``"churn"``: grow/shrink a
+        consumer stage's fleet by ``delta`` — ``stage`` defaults to the
+        final stage; ``"outage"``: kill every consumer of stages bound
+        to ``tier``), each with optional ``restore_after_s``.
+        ``repro.sim.scenarios.DriftSpec`` matches this shape.  Scheduled
+        as ordinary events, so drifted runs stay bit-reproducible.
+    readvisor: a :class:`~repro.cost.readvisor.ReAdvisor` watching the
+        run's observed hop delay against the cost-model prediction; the
+        executor ticks it every ``readvisor.interval_s`` of virtual time
+        and applies its hot-swap decisions (stage re-bind + consumer
+        migration).  ``pipe.run(readvise=...)`` is the other way to
+        attach one.
     autoscaler: an :class:`~repro.core.elastic.AutoScaler` for the *final*
         stage, stepped every ``autoscale_interval_s`` of virtual time;
         after each resize the executor grows/shrinks the live consumer
@@ -519,6 +588,8 @@ class SimExecutor:
                  service_model: Optional[ServiceModel] = None,
                  producer_offsets: Sequence[float] = (),
                  crash_plan: Sequence[Any] = (),
+                 drift_plan: Sequence[Any] = (),
+                 readvisor=None,
                  autoscaler=None,
                  autoscalers: Optional[Dict[Any, Any]] = None,
                  autoscale_interval_s: float = 0.2,
@@ -528,6 +599,8 @@ class SimExecutor:
         self.service_model = service_model
         self.producer_offsets = tuple(producer_offsets)
         self.crash_plan = tuple(crash_plan)
+        self.drift_plan = tuple(drift_plan)
+        self.readvisor = readvisor
         self.autoscaler = autoscaler
         self.autoscalers = dict(autoscalers) if autoscalers else {}
         self.autoscale_interval_s = autoscale_interval_s
@@ -606,9 +679,18 @@ class _SimRun:
                 raise ValueError("stage 0 (the sources) cannot be "
                                  "autoscaled — sources are not consumers")
             self.autoscalers[si] = scaler
+        # every consumer stage gets a cid counter continuing its static
+        # numbering: autoscaling, churn drift, outage recovery and swap
+        # migration all mint fresh cids from it
         self._stage_seq: Dict[int, Any] = {
             si: itertools.count(pipe.stage_tasks(si))
-            for si in self.autoscalers}
+            for si in range(1, len(pipe.stages))}
+        # online re-advisory: executor-level readvisor wins; otherwise the
+        # one run(readvise=...) parked on the pipeline (captured here —
+        # launch() clears pipe._readvise when begin() returns)
+        self.readvisor = (ex.readvisor if ex.readvisor is not None
+                          else getattr(pipe, "_readvise", None))
+        self._rv_stage: Optional[int] = None
         factor = (ex.speculative_factor if ex.speculative_factor is not None
                   else pipe._runtime_kw["speculative_factor"])
         self.speculation = (SpeculationStats(factor, pipe.metrics)
@@ -683,6 +765,17 @@ class _SimRun:
                 self._spawn_consumer(pipe.stage_cid(si, i), si, at=t0)
         for f in self.ex.crash_plan:
             self.sched.at(t0 + float(f.at_s), lambda f=f: self._inject(f))
+        for d in self.ex.drift_plan:
+            self.sched.at(t0 + float(d.at_s),
+                          lambda d=d: self._apply_drift(d))
+        rv = self.readvisor
+        if rv is not None:
+            self._rv_stage = self._resolve_stage(rv.stage)
+            if self._rv_stage == 0:
+                raise ValueError("the source stage cannot be re-advised — "
+                                 "watch a consumer stage")
+            rv.begin(t0)
+            self.sched.at(t0 + rv.interval_s, self._readvise_tick)
         if self.autoscalers:
             self.sched.after(self.ex.autoscale_interval_s,
                              self._autoscale_tick)
@@ -1156,6 +1249,181 @@ class _SimRun:
             return
         self.metrics.event("consumer_restarted", consumer=cid)
         self._spawn_consumer(cid, len(self.pipe.stages) - 1)
+
+    # -- drift injection ---------------------------------------------------
+
+    def _apply_drift(self, d: Any) -> None:
+        """Apply one scheduled drift event (band / churn / outage) — an
+        ordinary DES event, so drifted runs stay bit-reproducible."""
+        if self.state.stop.is_set():
+            return
+        kind = getattr(d, "kind", "band")
+        if kind == "band":
+            self._drift_band(d)
+        elif kind == "churn":
+            self._drift_churn(d)
+        elif kind == "outage":
+            self._drift_outage(d)
+        else:
+            raise ValueError(f"unknown drift kind {kind!r}")
+
+    def _drift_band(self, d: Any) -> None:
+        """Re-price a hop's live shaper in place: the token bucket's
+        ``_available_at`` backlog survives, so traffic already queued
+        behind the old band drains at the *new* rate — what a real link
+        degradation does to in-flight transfers."""
+        topics = self.state.topics
+        hop = int(getattr(d, "hop", -1) if getattr(d, "hop", None)
+                  is not None else -1)
+        if hop < 0:
+            hop += len(topics)
+        if not 0 <= hop < len(topics):
+            raise ValueError(f"drift hop {hop} out of range "
+                             f"(pipeline has {len(topics)} hops)")
+        topic = topics[hop]
+        shaper = topic.shaper
+        old = None
+        if shaper is None:
+            shaper = WanShaper(bandwidth_bps=float(d.bandwidth_bps),
+                               rtt_s=float(d.rtt_s), sleep=False)
+            topic.shaper = shaper
+            self.pipe._shapers[hop] = shaper
+        else:
+            old = (shaper.bandwidth_bps, shaper.rtt_s)
+            if getattr(d, "bandwidth_bps", None) is not None:
+                shaper.bandwidth_bps = float(d.bandwidth_bps)
+            if getattr(d, "rtt_s", None) is not None:
+                shaper.rtt_s = float(d.rtt_s)
+        self.metrics.event("drift_band", hop=hop,
+                           bandwidth_bps=shaper.bandwidth_bps,
+                           rtt_s=shaper.rtt_s)
+        restore = getattr(d, "restore_after_s", None)
+        if restore is not None and old is not None:
+            def _restore(shaper=shaper, old=old, hop=hop):
+                if self.state.stop.is_set():
+                    return
+                shaper.bandwidth_bps, shaper.rtt_s = old
+                self.metrics.event("drift_band_restored", hop=hop)
+            self.sched.after(float(restore), _restore)
+
+    def _churn(self, si: int, delta: int) -> None:
+        """Grow (``delta > 0``) or retire (``delta < 0``) stage ``si``'s
+        live consumer fleet — the shared core of churn drift and its
+        restore."""
+        if delta > 0:
+            for _ in range(delta):
+                cid = self.pipe.stage_cid(si, next(self._stage_seq[si]))
+                self.metrics.event("consumer_spawned", consumer=cid)
+                self._spawn_consumer(cid, si)
+        elif delta < 0:
+            alive = self._alive_consumers(si)
+            for rec in alive[delta:]:          # retire the newest first
+                if rec["actor"] is not None and rec["actor"].alive:
+                    rec["exit_reason"] = "retire"
+                    rec["actor"].kill()
+
+    def _drift_churn(self, d: Any) -> None:
+        si = (self._resolve_stage(d.stage)
+              if getattr(d, "stage", None) is not None
+              else len(self.pipe.stages) - 1)
+        if si == 0:
+            raise ValueError("stage 0 (the sources) cannot churn — "
+                             "sources are not consumers")
+        delta = int(getattr(d, "delta", 0))
+        self._churn(si, delta)
+        self.metrics.event("drift_churn", stage=self.pipe.stages[si].name,
+                           delta=delta)
+        restore = getattr(d, "restore_after_s", None)
+        if restore is not None and delta:
+            def _restore(si=si, delta=delta):
+                if self.state.stop.is_set():
+                    return
+                self._churn(si, -delta)
+                self.metrics.event("drift_churn_restored",
+                                   stage=self.pipe.stages[si].name)
+            self.sched.after(float(restore), _restore)
+
+    def _drift_outage(self, d: Any) -> None:
+        """A whole tier goes dark: every live consumer of stages bound to
+        that tier is killed at once (crash semantics — group rebalance
+        frees their partitions immediately).  ``restore_after_s`` brings
+        the same head-counts back as fresh members."""
+        tier = d.tier
+        counts: Dict[int, int] = {}
+        for si in range(1, len(self.pipe.stages)):
+            if self.pipe.stages[si].pilot.tier != tier:
+                continue
+            alive = self._alive_consumers(si)
+            counts[si] = len(alive)
+            for rec in alive:
+                if rec["actor"] is not None and rec["actor"].alive:
+                    rec["exit_reason"] = "outage"
+                    rec["actor"].kill()
+        self.metrics.event("drift_outage", tier=tier,
+                           consumers=sum(counts.values()))
+        restore = getattr(d, "restore_after_s", None)
+        if restore is not None:
+            def _restore(counts=counts, tier=tier):
+                if self.state.stop.is_set():
+                    return
+                for si, n in counts.items():
+                    self._churn(si, n)
+                self.metrics.event("drift_outage_restored", tier=tier)
+            self.sched.after(float(restore), _restore)
+
+    # -- online re-advisory (hot-swap) ------------------------------------
+
+    def _readvise_tick(self) -> None:
+        # like _monitor_tick: stop rescheduling once the run is over (or,
+        # in a sharded run with no local sources, was never fed) so the
+        # scheduler can drain and the shard can report done
+        if self.state.stop.is_set() or not self.tasks:
+            return
+        rv, si, pipe = self.readvisor, self._rv_stage, self.pipe
+        dec = rv.step(now=self.clock.now(), metrics=self.metrics,
+                      topic=self.state.topics[si - 1].name,
+                      current_tier=pipe.stages[si].pilot.tier,
+                      src_tier=pipe.stages[si - 1].pilot.tier)
+        if dec is not None:
+            self.metrics.event("readvise_decision",
+                               stage=pipe.stages[si].name,
+                               from_tier=dec.from_tier,
+                               to_tier=dec.to_tier)
+            self.sched.after(rv.apply_delay_s,
+                             lambda: self._apply_swap(dec))
+        self.sched.after(rv.interval_s, self._readvise_tick)
+
+    def _apply_swap(self, dec: Any) -> None:
+        """Execute a re-advisory decision: re-bind the watched stage to
+        the winning tier's pilot, then migrate its consumer fleet."""
+        if self.state.stop.is_set():
+            return
+        rv, si, pipe = self.readvisor, self._rv_stage, self.pipe
+        pipe.rebind_stage(pipe.stages[si].name, rv.pilot_for(dec.to_tier))
+        self._migrate_stage(si)
+        rv.applied(dec, self.clock.now())
+
+    def _migrate_stage(self, si: int) -> None:
+        """Epoch-based graceful migration: bump the stage's placement
+        epoch (old-generation consumers drain out at their next loop top
+        — any message they hold finishes and commits under the swapped
+        binding first), nudge parked members so they notice now instead
+        of at their idle deadline, and spawn a same-size replacement
+        fleet on the new pilot.  The overlap window is covered by the
+        hop's at-least-once + dedup machinery."""
+        state = self.state
+        state.stage_epoch[si] = state.stage_epoch.get(si, 0) + 1
+        old = self._alive_consumers(si)
+        for rec in old:
+            wait = rec["wait"]
+            if wait is not None and not wait.resolved:
+                # timed_out=True resumes None: the body loops without
+                # grabbing a message and hits the epoch check
+                self._wake(wait, True)
+        for _ in range(len(old)):
+            cid = self.pipe.stage_cid(si, next(self._stage_seq[si]))
+            self.metrics.event("consumer_spawned", consumer=cid)
+            self._spawn_consumer(cid, si)
 
     # -- periodic machinery: heartbeats + autoscaler ----------------------
 

@@ -126,6 +126,12 @@ class _RunState:
     # stage name -> consumers currently parked in a poll (the threaded
     # strategy's idle-slot ledger for capacity-aware speculation)
     idle: Dict[str, int] = field(default_factory=dict)
+    # stage idx -> placement epoch: bumped by a live hot-swap
+    # (rebind_stage + executor migration). Consumers capture the epoch at
+    # spawn and drain out gracefully when it moves past them, so swapped
+    # stages never have two generations pulling from one group at once
+    # beyond the hand-off window.
+    stage_epoch: Dict[int, int] = field(default_factory=dict)
     lock: threading.Lock = field(default_factory=threading.Lock)
     stop: threading.Event = field(default_factory=threading.Event)
     processed_sem: threading.Semaphore = field(
@@ -233,6 +239,10 @@ class ContinuumPipeline:
         self._group: Optional[ConsumerGroup] = None
         self._run_groups: List[ConsumerGroup] = []
         self._arrival_plan: Optional[List[Sequence[float]]] = None
+        # live online re-advisory: run(readvise=...) parks the ReAdvisor
+        # here for the duration of the call; executors pick it up in
+        # begin()/run() exactly like _arrival_plan
+        self._readvise = None
 
     # -- construction helpers ------------------------------------------------
 
@@ -333,6 +343,43 @@ class ContinuumPipeline:
     def _fn(self, stage: str) -> Optional[ProcessFn]:
         with self._fn_lock:
             return self._fns[stage]
+
+    def rebind_stage(self, stage: str, pilot: Pilot) -> int:
+        """Re-bind a stage to a different pilot at runtime — the placement
+        half of a hot-swap (``replace_function`` is the payload half).
+        Re-prices the adjacent hops' shapers from the routed link between
+        the *new* tier pair, mutating the live run's hop topics in place
+        so queued-but-unsent traffic rides the new link.  Returns the
+        stage index.  The executors' migration machinery (epoch bump +
+        consumer respawn) is what actually moves the running tasks; this
+        method only flips the bindings."""
+        import dataclasses
+        names = [s.name for s in self.stages]
+        try:
+            idx = names.index(stage)
+        except ValueError:
+            raise KeyError(stage) from None
+        old_tier = self.stages[idx].pilot.tier
+        self.stages[idx] = dataclasses.replace(self.stages[idx],
+                                               pilot=pilot)
+        for hop in (idx - 1, idx):
+            if not 0 <= hop < len(self.stages) - 1:
+                continue
+            shaper = self._hop_shaper(self.stages[hop].pilot.tier,
+                                      self.stages[hop + 1].pilot.tier)
+            old = self._shapers[hop]
+            if old is not None and shaper is not None:
+                # keep the live shaper object (its _available_at token
+                # bucket holds queued traffic) and re-price it
+                old.bandwidth_bps = shaper.bandwidth_bps
+                old.rtt_s = shaper.rtt_s
+            else:
+                self._shapers[hop] = shaper
+                if hop < len(self._topics):
+                    self._topics[hop].shaper = shaper
+        self.metrics.event("stage_rebound", stage=stage,
+                           from_tier=old_tier, to_tier=pilot.tier)
+        return idx
 
     def current_lag(self) -> int:
         """Broker lag of the live run's final consumer group — the
@@ -442,7 +489,19 @@ class ContinuumPipeline:
         # them synchronously at the yield point
         poll = Poll(group, cid, timeout_s=0.2, stage=stage_name)
         svc = Service(stage_name)
+        epochs = state.stage_epoch
+        my_epoch = epochs.get(stage_idx, 0)
         while not stopped():
+            if epochs.get(stage_idx, 0) != my_epoch:
+                # a hot-swap moved this stage to a new placement epoch:
+                # any message this consumer finished is already committed,
+                # so leaving the group here hands its partitions to the
+                # replacement generation with at-least-once semantics
+                # (dedup absorbs any redelivery overlap).
+                group.leave(cid)
+                metrics.event("consumer_drained", cid=cid,
+                              stage=stage_name, epoch=my_epoch)
+                return
             poll.wake_at = idle_deadline
             msg = yield poll
             if msg is None:
@@ -582,7 +641,8 @@ class ContinuumPipeline:
             latency_budget: Optional[float] = None,
             wan_budget: Optional[float] = None,
             hybrid_reduce: Optional[List[int]] = None,
-            arrival_plan: Optional[List[Sequence[float]]] = None):
+            arrival_plan: Optional[List[Sequence[float]]] = None,
+            readvise=None):
         """Drive ``n_messages`` end-to-end (default 512 — what the paper
         sends per run).
 
@@ -615,6 +675,14 @@ class ContinuumPipeline:
         per-cell advisory fidelity (default 32 — the whole grid in a few
         hundred ms); ``timeout_s``/``collect_results`` do not apply and
         ``scheduler`` is rejected.
+
+        ``readvise=ReAdvisor(...)`` attaches an *online* re-advisor
+        (:class:`~repro.cost.readvisor.ReAdvisor`) for the duration of
+        the run: the executor ticks it periodically (SimExecutor: a
+        scheduled virtual-time event; ThreadedExecutor: a monitor
+        thread), and when observed hop latency flips the placement
+        ranking beyond hysteresis the watched stage is hot-swapped live
+        via :meth:`rebind_stage` + consumer migration.
         """
         if placement == "advise":
             if scheduler is not None:
@@ -654,6 +722,7 @@ class ContinuumPipeline:
             n_messages = plan_total
         n_messages = 512 if n_messages is None else n_messages
         self._arrival_plan = arrival_plan
+        self._readvise = readvise
         try:
             strategy = (scheduler if scheduler is not None
                         else ThreadedExecutor())
@@ -662,10 +731,12 @@ class ContinuumPipeline:
                                 collect_results=collect_results)
         finally:
             self._arrival_plan = None
+            self._readvise = None
 
     def launch(self, scheduler, *, n_messages: Optional[int] = None,
                timeout_s: float = 600.0, collect_results: bool = False,
-               arrival_plan: Optional[List[Sequence[float]]] = None):
+               arrival_plan: Optional[List[Sequence[float]]] = None,
+               readvise=None):
         """Start this pipeline under a :class:`SimExecutor` *without*
         draining it: returns the executor's windowed run handle
         (``start``-ed), which a caller advances in bounded virtual-time
@@ -686,12 +757,14 @@ class ContinuumPipeline:
             n_messages = plan_total
         n_messages = 512 if n_messages is None else n_messages
         self._arrival_plan = arrival_plan
+        self._readvise = readvise
         try:
             return scheduler.begin(self, n_messages=n_messages,
                                    timeout_s=timeout_s,
                                    collect_results=collect_results)
         finally:
             self._arrival_plan = None
+            self._readvise = None
 
 
 class EdgeToCloudPipeline(ContinuumPipeline):

@@ -70,6 +70,7 @@ class Advice:
     wan_bytes: float = 0.0
     tiers: Tuple[str, ...] = ()           # per-stage tier vector
     hybrid_reduce: Optional[int] = None   # set on hybrid/fog cells only
+    metro_band: Optional[str] = None      # fog cells: swept edge→fog band
     feasible: bool = True                 # meets the advise() budgets
     spec_launches: int = 0                # straggler speculation accounting
     spec_wins: int = 0
@@ -89,6 +90,7 @@ class Advice:
                 "wan_bytes": self.wan_bytes,
                 "makespan_s": self.makespan_s,
                 "hybrid_reduce": self.hybrid_reduce,
+                "metro": self.metro_band,
                 "feasible": self.feasible,
                 "spec_launches": self.spec_launches,
                 "spec_wins": self.spec_wins,
@@ -118,7 +120,8 @@ class AdvisorReport:
         return sorted(cells, key=lambda c: (not c.feasible,
                                             -c.throughput_msgs_s,
                                             c.latency_mean_s, c.placement,
-                                            c.hybrid_reduce or 0))
+                                            c.hybrid_reduce or 0,
+                                            c.metro_band or ""))
 
     def best(self, band: str) -> Advice:
         rank = self.ranking(band)
@@ -222,15 +225,21 @@ class PlacementAdvisor:
                bands: Optional[Sequence[str]] = None,
                latency_budget: Optional[float] = None,
                wan_budget: Optional[float] = None,
-               hybrid_reduce: Optional[Sequence[int]] = None
+               hybrid_reduce: Optional[Sequence[int]] = None,
+               metro_bands: Optional[Sequence[str]] = None
                ) -> AdvisorReport:
         """Sweep {placements} × {bands} (× {hybrid_reduce} for the hybrid
-        placement) and rank multi-objectively.
+        placement, × {metro_bands} for the fog placement) and rank
+        multi-objectively.
 
-        ``latency_budget`` caps predicted p95 end-to-end latency
-        (seconds); ``wan_budget`` caps megabytes through the WAN for the
-        whole advisory run.  Cells violating either are flagged
-        infeasible and rank after every feasible cell."""
+        ``metro_bands`` sweeps the edge→fog metro link for fog cells the
+        same way WAN bands sweep the cloud hop (names from the profile's
+        ``metro_bands`` table); other placements never ride the metro
+        hop and are evaluated once per WAN band.  ``latency_budget``
+        caps predicted p95 end-to-end latency (seconds); ``wan_budget``
+        caps megabytes through the WAN for the whole advisory run.
+        Cells violating either are flagged infeasible and rank after
+        every feasible cell."""
         # resolve string names against *this advisor's* calibration (a
         # custom cost_model re-prices the specs, not just the tier rates)
         if isinstance(model, str):
@@ -245,6 +254,12 @@ class PlacementAdvisor:
             table = self.cost.profile.wan_bands
             bands = sorted(table, key=lambda b: table[b].bandwidth)
         reduces = tuple(int(x) for x in hybrid_reduce or ())
+        metros = tuple(metro_bands or ())
+        for m in metros:                   # unknown name → helpful error
+            if m not in self.cost.profile.metro_bands:
+                raise ValueError(
+                    f"unknown metro band {m!r}; known: "
+                    f"{sorted(self.cost.profile.metro_bands)}")
         # hybrid and fog both pre-aggregate (on the edge vs on the fog
         # tier), so the reduce-factor sweep applies to both placements
         reduced_placements = ("hybrid", "fog")
@@ -252,7 +267,11 @@ class PlacementAdvisor:
             for placement in placements:
                 sweep = reduces if placement in reduced_placements \
                     and reduces else (None,)
-                for red in sweep:
+                # only the fog placement rides the edge→fog metro hop
+                msweep = metros if placement == "fog" and metros \
+                    else (None,)
+                for red, metro in ((r_, m_) for r_ in sweep
+                                   for m_ in msweep):
                     mspec = (spec if red is None
                              else dataclasses.replace(spec,
                                                       hybrid_reduce=red))
@@ -262,6 +281,7 @@ class PlacementAdvisor:
                         n_devices=self.n_devices,
                         n_consumers=self.n_consumers,
                         n_points=self.n_points,
+                        metro_band=metro,
                         seed=self.seed, service_sigma=self.service_sigma,
                         speculative_factor=self.speculative_factor,
                         cost=self.cost)
@@ -285,6 +305,7 @@ class PlacementAdvisor:
                         hybrid_reduce=(mspec.hybrid_reduce
                                        if placement in reduced_placements
                                        else None),
+                        metro_band=metro,
                         feasible=feasible,
                         spec_launches=r.spec_launches,
                         spec_wins=r.spec_wins,

@@ -48,6 +48,10 @@ class CostModel:
         """The same costs priced over a named WAN band."""
         return CostModel(self.profile.with_wan(band), self.costs)
 
+    def with_metro(self, band: str) -> "CostModel":
+        """The same costs priced over a named metro (edge→fog) band."""
+        return CostModel(self.profile.with_metro(band), self.costs)
+
     # -- lookups -----------------------------------------------------------
 
     @property
@@ -148,6 +152,44 @@ class CostModel:
         def model(stage, ctx, payload):
             t = base.get(stage, 0.0)
             if t <= 0.0:
+                return t
+            with lock:
+                z = rng.normal(mu, sigma)
+            return t * float(np.exp(z))
+
+        return model
+
+    def tier_service_model(self, stage_flops: Mapping[str, float], *,
+                           resolve: Callable[[str], Tuple[str, int]],
+                           sigma: float = 0.0, seed: int = 0
+                           ) -> Callable[[str, object, object], float]:
+        """Like :meth:`service_model`, but per-stage *FLOPs* are priced at
+        the tier a stage executes on **at charge time** — ``resolve(stage)``
+        returns the live ``(tier, n_workers)`` binding.  This is what makes
+        a mid-run placement hot-swap re-price service automatically: after
+        the ReAdvisor rebinds a stage from cloud to fog, the very next
+        charge runs at the fog device's peak rate, with no service-model
+        rebuild.  Noise draws (``sigma > 0``) come from the same seeded
+        stream as :meth:`service_model`, in charge order, so swapped runs
+        stay bit-reproducible under the single-threaded SimExecutor."""
+        flops = dict(stage_flops)
+        if sigma > 0.0:
+            import threading
+
+            import numpy as np
+            rng = np.random.default_rng([seed & 0xFFFFFFFF, 0xC057])
+            lock = threading.Lock()
+            mu = -0.5 * sigma * sigma
+        else:
+            rng = None
+
+        def model(stage, ctx, payload):
+            f = flops.get(stage, 0.0)
+            if f <= 0.0:
+                return 0.0
+            tier, workers = resolve(stage)
+            t = self.compute_s(f, tier, workers)
+            if rng is None:
                 return t
             with lock:
                 z = rng.normal(mu, sigma)

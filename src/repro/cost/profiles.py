@@ -205,6 +205,19 @@ DEVICE_EDGE_LINK = LinkModel(bandwidth=100e6 / 8.0, latency_s=0.005)
 EDGE_FOG_LINK = LinkModel(bandwidth=100e6 / 8.0, latency_s=0.020)
 CLOUD_HPC_LINK = LinkModel(bandwidth=1e9, latency_s=0.020)
 
+# Metro (edge→fog) bands, sweepable exactly like the WAN bands.  All
+# share the 20 ms metro latency — distinct from every WAN band's 140+ ms
+# and from the 5 ms device hop, so ``with_wan`` / ``with_metro``
+# re-pricing never cross-match each other's links.  The default
+# ``100mbit`` band *is* :data:`EDGE_FOG_LINK`, so profiles that never
+# sweep the metro hop are unchanged.
+METRO_BANDS: Dict[str, LinkModel] = {
+    "10mbit": LinkModel(bandwidth=10e6 / 8.0, latency_s=0.020),
+    "50mbit": LinkModel(bandwidth=50e6 / 8.0, latency_s=0.020),
+    "100mbit": EDGE_FOG_LINK,
+}
+DEFAULT_METRO_BAND = "100mbit"
+
 
 @dataclass(frozen=True)
 class TierProfile:
@@ -224,6 +237,9 @@ class ContinuumProfile:
     wan_bands: Mapping[str, LinkModel] = field(
         default_factory=lambda: dict(WAN_BANDS))
     default_wan: str = DEFAULT_WAN_BAND
+    metro_bands: Mapping[str, LinkModel] = field(
+        default_factory=lambda: dict(METRO_BANDS))
+    default_metro: str = DEFAULT_METRO_BAND
 
     def tier(self, name: str) -> TierProfile:
         try:
@@ -234,6 +250,9 @@ class ContinuumProfile:
 
     def wan(self, band: Optional[str] = None) -> LinkModel:
         return self.wan_bands[band or self.default_wan]
+
+    def metro(self, band: Optional[str] = None) -> LinkModel:
+        return self.metro_bands[band or self.default_metro]
 
     @property
     def topology(self) -> Topology:
@@ -291,6 +310,17 @@ class ContinuumProfile:
         links = {pair: (wan if link in band_links else link)
                  for pair, link in self.links.items()}
         return replace(self, links=links, default_wan=band)
+
+    def with_metro(self, band: str) -> "ContinuumProfile":
+        """The same continuum with every metro (edge→fog) link re-priced
+        at a named metro band — the fog-placement analog of
+        :meth:`with_wan`.  A link counts as metro when it currently
+        carries one of this profile's metro band prices."""
+        metro = self.metro(band)
+        band_links = set(self.metro_bands.values())
+        links = {pair: (metro if link in band_links else link)
+                 for pair, link in self.links.items()}
+        return replace(self, links=links, default_metro=band)
 
 
 def _default_profile() -> ContinuumProfile:

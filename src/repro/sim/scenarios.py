@@ -52,7 +52,7 @@ stepped inside the DES, with the consumer pool following its resizes.
 from __future__ import annotations
 
 import time as _walltime
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace as _dc_replace
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -67,8 +67,10 @@ from repro.core.placement import PlacementEngine, TaskProfile
 from repro.cost.calibrate import (DEFAULT_GEN_S_PER_POINT,
                                   DEFAULT_HYBRID_REDUCE,
                                   DEFAULT_PREPROCESS_FLOPS_PER_POINT)
-from repro.cost.model import CostModel, default_cost_model
+from repro.cost.model import INGEST_FLOPS_PER_VALUE, CostModel, \
+    default_cost_model
 from repro.cost.profiles import WAN_BANDS as _WAN_LINKS
+from repro.cost.readvisor import ReAdvisor, ReAdviseSpec
 from repro.ml.datagen import N_FEATURES, message_nbytes
 
 # the paper's iPerf band plus the constrained 10 Mbit/s point used for the
@@ -343,6 +345,34 @@ class FailureSpec:
 
 
 @dataclass(frozen=True)
+class DriftSpec:
+    """One mid-run environment drift event, scheduled as an ordinary DES
+    event at virtual time ``at_s`` (drifted runs stay bit-identical).
+
+    ``kind="band"``: re-price hop ``hop``'s live link (default: the last
+    hop — the WAN crossing).  Name a band via ``band`` (looked up in the
+    scenario profile's ``wan_bands``, or ``metro_bands`` when
+    ``table="metro"``) or give explicit ``bandwidth_bps``/``rtt_s``.
+    ``kind="churn"``: grow (``delta > 0``) or shrink (``delta < 0``)
+    ``stage``'s consumer fleet (default: the final stage).
+    ``kind="outage"``: every consumer of stages bound to ``tier`` dies
+    at once.  ``restore_after_s`` undoes the drift that much later
+    (band: old numbers back; churn: reverse delta; outage: same
+    head-counts respawn as fresh members)."""
+    at_s: float
+    kind: str = "band"              # band | churn | outage
+    hop: int = -1                   # band: which hop's shaper
+    band: Optional[str] = None      # band: name into the band table
+    table: str = "wan"              # band-name table: wan | metro
+    bandwidth_bps: Optional[float] = None
+    rtt_s: Optional[float] = None
+    stage: Optional[str] = None     # churn: which consumer stage
+    delta: int = 0                  # churn: consumers to add/remove
+    tier: Optional[str] = None      # outage: which tier goes dark
+    restore_after_s: Optional[float] = None
+
+
+@dataclass(frozen=True)
 class Scenario:
     """One Fig-3 cell.  ``cost`` re-prices tier rates and WAN links; it
     does *not* reach inside ``model`` — when sweeping a custom
@@ -379,10 +409,22 @@ class Scenario:
     # (0 = off; mirrors TaskRuntime.speculative_factor under the DES)
     speculative_factor: float = 0.0
     cost: Optional[CostModel] = None          # default: shared calibration
+    # mid-run environment drift (band degradation / churn / outage),
+    # applied by the SimExecutor as ordinary scheduled events
+    drift: Tuple[DriftSpec, ...] = ()
+    # online re-advisory: watch the named stage's observed hop delay and
+    # hot-swap its placement when the ranking flips beyond hysteresis
+    readvise: Optional[ReAdviseSpec] = None
+    # edge→fog metro band (key into the profile's metro_bands); None =
+    # the profile default — makes the fog hop sweepable like WAN bands
+    metro_band: Optional[str] = None
 
     @property
     def cost_model(self) -> CostModel:
-        return self.cost or default_cost_model()
+        cm = self.cost or default_cost_model()
+        if self.metro_band is not None:
+            cm = cm.with_metro(self.metro_band)
+        return cm
 
     @property
     def effective_service_sigma(self) -> float:
@@ -395,7 +437,9 @@ class Scenario:
         return (f"{self.model.name}/{self.placement}/{self.wan_band}"
                 f"{'/fail' if self.failures else ''}"
                 f"{'/autoscale' if self.autoscale or self.autoscale_stages else ''}"
-                f"{'/open-loop' if self.arrival else ''}")
+                f"{'/open-loop' if self.arrival else ''}"
+                f"{'/drift' if self.drift else ''}"
+                f"{'/readvise' if self.readvise else ''}")
 
 
 @dataclass
@@ -422,6 +466,10 @@ class ScenarioResult:
     spec_wins: int = 0                # (wins + losses + cancelled == launches)
     spec_losses: int = 0
     spec_cancelled: int = 0
+    # online re-advisory: one entry per applied hot-swap, with virtual
+    # decision/apply timestamps (deterministic columns)
+    swaps: List[dict] = field(default_factory=list)
+    drift_events: int = 0             # drift events injected into the run
 
     def row(self) -> Dict[str, object]:
         """Deterministic summary — identical across runs at the same seed
@@ -445,6 +493,8 @@ class ScenarioResult:
             "spec_wins": self.spec_wins,
             "spec_losses": self.spec_losses,
             "spec_cancelled": self.spec_cancelled,
+            "drift_events": self.drift_events,
+            "swaps": [dict(s) for s in self.swaps],
         }
 
 
@@ -506,6 +556,76 @@ def _service_model(sc: Scenario):
         stages, sigma=sc.effective_service_sigma, seed=sc.seed)
 
 
+def _stage_flops(sc: Scenario, stage: str) -> float:
+    """Per-message FLOPs of a consumer stage, tier-independent — the
+    tier-aware service model (and the ReAdvisor's scoring) price these at
+    whatever tier the stage is bound to *at charge time*."""
+    m = sc.model
+    if stage == "process_fog":
+        return m.preprocess_flops_per_point * sc.n_points
+    if stage != "process_cloud":
+        raise ValueError(f"no per-message FLOPs known for stage {stage!r}")
+    if sc.placement == "edge":
+        # only the published model output needs ingesting/merging
+        return (m.output_bytes / 8.0) * INGEST_FLOPS_PER_VALUE
+    points = sc.n_points if sc.placement == "cloud" \
+        else max(sc.n_points // m.hybrid_reduce, 1)
+    return m.flops_per_point * points
+
+
+def _readvise_service_model(sc: Scenario, pipe):
+    """Service model for re-advised runs: the watched stage's FLOPs are
+    priced at its *live* pilot's tier at charge time, so a hot-swap
+    re-prices service with no model rebuild; every other stage keeps its
+    fixed pre-priced time from :func:`_service_model`."""
+    name = sc.readvise.stage
+    names = [s.name for s in pipe.stages]
+    try:
+        idx = names.index(name)
+    except ValueError:
+        raise ValueError(f"readvise stage {name!r} not in pipeline "
+                         f"stages {names}") from None
+    if idx == 0:
+        raise ValueError("cannot re-advise stage 0 (the sources)")
+    fixed = _service_model(sc)
+    tiered = sc.cost_model.tier_service_model(
+        {name: _stage_flops(sc, name)},
+        resolve=lambda stage: (pipe.stages[idx].pilot.tier, 1),
+        sigma=sc.effective_service_sigma, seed=sc.seed)
+
+    def model(stage, ctx, payload):
+        if stage == name:
+            return tiered(stage, ctx, payload)
+        return fixed(stage, ctx, payload)
+
+    return model
+
+
+def _resolve_drift(sc: Scenario) -> Tuple[DriftSpec, ...]:
+    """Fill band-name drift events with concrete numbers from the
+    scenario profile's band tables (the executor applies numbers, not
+    names) — unknown names/tables fail at build time, not mid-run."""
+    out = []
+    prof = sc.cost_model.profile
+    for d in sc.drift:
+        if d.kind == "band" and d.band is not None:
+            if d.table == "wan":
+                table = prof.wan_bands
+            elif d.table == "metro":
+                table = prof.metro_bands
+            else:
+                raise ValueError(f"unknown drift band table {d.table!r}; "
+                                 f"known: wan, metro")
+            if d.band not in table:
+                raise ValueError(f"unknown {d.table} band {d.band!r}; "
+                                 f"known: {sorted(table)}")
+            link = table[d.band]
+            d = _dc_replace(d, bandwidth_bps=link.bandwidth_bps,
+                            rtt_s=link.latency_s)
+        out.append(d)
+    return tuple(out)
+
+
 def _wan_link(sc: Scenario):
     """The scenario's WAN band from *its* cost model's profile (a custom
     ContinuumProfile re-prices the transfer side too, not just compute)."""
@@ -561,6 +681,11 @@ def build_pipeline(sc: Scenario):
                                              n_workers=n_cons))
     bw_bps, rtt = wan.bandwidth_bps, wan.latency_s
     payload = _payload(sc)
+    # band-true pricing view: the pipeline's engine (what rebind_stage
+    # re-prices hop shapers with) and the ReAdvisor's predictions both
+    # route edge->cloud over *this scenario's* WAN band
+    band_cost = sc.cost_model.with_wan(sc.wan_band)
+    engine = PlacementEngine(cost_model=band_cost)
     # service times are priced by the service model, not heartbeats;
     # only explicit "silent" failure injection should trip the monitor
     heartbeat_s = (30.0 if any(f.kind == "silent" for f in sc.failures)
@@ -587,6 +712,7 @@ def build_pipeline(sc: Scenario):
                                rtt_s=metro.latency_s, sleep=False),
                      wan_shaper],
             metrics=metrics, clock=clock,
+            placement_engine=engine,
             speculative_factor=sc.speculative_factor,
             heartbeat_timeout_s=heartbeat_s)
     else:
@@ -597,7 +723,7 @@ def build_pipeline(sc: Scenario):
             n_edge_devices=sc.n_devices, n_partitions=sc.n_devices,
             cloud_consumers=n_cons, topic_name="e2c",
             wan_shaper=wan_shaper,
-            metrics=metrics, clock=clock,
+            metrics=metrics, clock=clock, placement_engine=engine,
             speculative_factor=sc.speculative_factor,
             heartbeat_timeout_s=heartbeat_s)
     scaler = None
@@ -626,10 +752,36 @@ def build_pipeline(sc: Scenario):
         gen_s = sc.gen_s_per_point * sc.n_points
         offsets = [float(rng.uniform(0.0, gen_s + 1e-9))
                    for _ in range(sc.n_devices)]
-    ex = SimExecutor(clock=clock, service_model=_service_model(sc),
+    # online re-advisory: build the watcher over the scenario's (band-
+    # adjusted) cost model with one pilot per candidate tier — existing
+    # pilots are reused, missing tiers get a fresh consumer-sized pilot
+    rv = None
+    if sc.readvise is not None:
+        spec = sc.readvise
+        pilots = {"edge": edge, "cloud": cloud}
+        if sc.placement == "fog":
+            pilots["fog"] = fog
+        targets = {}
+        for tier in spec.targets:
+            if tier not in pilots:
+                pilots[tier] = mgr.submit_pilot(ComputeResource(
+                    tier=tier, n_workers=n_cons))
+            targets[tier] = pilots[tier]
+        rv = ReAdvisor(band_cost, stage=spec.stage,
+                       flops=_stage_flops(sc, spec.stage),
+                       targets=targets, interval_s=spec.interval_s,
+                       hysteresis=spec.hysteresis,
+                       min_samples=spec.min_samples,
+                       cooldown_s=spec.cooldown_s,
+                       max_swaps=spec.max_swaps,
+                       apply_delay_s=spec.apply_delay_s)
+    service = (_readvise_service_model(sc, pipe) if rv is not None
+               else _service_model(sc))
+    ex = SimExecutor(clock=clock, service_model=service,
                      producer_offsets=offsets, crash_plan=sc.failures,
                      autoscaler=scaler, autoscalers=scalers,
-                     autoscale_interval_s=sc.autoscale_interval_s)
+                     autoscale_interval_s=sc.autoscale_interval_s,
+                     drift_plan=_resolve_drift(sc), readvisor=rv)
     return pipe, ex, mgr
 
 
@@ -684,6 +836,9 @@ def run_scenario(sc: Scenario) -> ScenarioResult:
         spec_cancelled=int(metrics.counter("runtime.speculative_cancelled")),
         placement_estimates=placement_estimates(sc),
         autoscale_events=histories,
+        swaps=(list(ex.readvisor.swap_log)
+               if ex.readvisor is not None else []),
+        drift_events=len(sc.drift),
         wall_ms=(_walltime.perf_counter() - t_wall) * 1e3,
         metrics=metrics)
 

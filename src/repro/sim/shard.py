@@ -129,7 +129,8 @@ class ShardRunner:
     def __init__(self, shard_id: int, pipe, executor: SimExecutor, handle,
                  metrics: MetricsRegistry, *,
                  export_hops: Optional[Dict[int, int]] = None,
-                 streaming: bool = False, mgr: Optional[PilotManager] = None):
+                 streaming: bool = False, mgr: Optional[PilotManager] = None,
+                 control_pilots: Optional[Dict[str, object]] = None):
         self.shard_id = shard_id
         self.pipe = pipe
         self.executor = executor
@@ -137,6 +138,11 @@ class ShardRunner:
         self.metrics = metrics
         self.streaming = streaming
         self.mgr = mgr
+        # tier -> Pilot map for applying *remote* re-advisory swap
+        # commands (the control channel); None = this shard never
+        # applies controls
+        self.control_pilots = dict(control_pilots or {})
+        self._ctl_wm = 0                       # decisions already exported
         # hop index -> destination shard id; messages appended to that
         # hop's topic are boundary traffic for the destination shard
         self.export_hops = dict(export_hops or {})
@@ -197,6 +203,39 @@ class ShardRunner:
                                produced_t=produced_t)
             self.injected[msg_id] = (now, ready_at)
 
+    def collect_controls(self) -> List[dict]:
+        """Re-advisory swap decisions made by this shard's ReAdvisor
+        since the last collection — the control-channel counterpart of
+        :meth:`collect_exports`.  Each entry carries the absolute virtual
+        apply time; with ``window_s <= apply_delay_s`` the receiving
+        shard's clock is guaranteed not to have passed it yet."""
+        rv = getattr(self.executor, "readvisor", None)
+        if rv is None:
+            return []
+        out = []
+        for dec in rv.decisions[self._ctl_wm:]:
+            out.append({"stage": dec.stage, "from_tier": dec.from_tier,
+                        "to_tier": dec.to_tier,
+                        "t_decided": dec.t_decided,
+                        "t_apply": dec.t_decided + rv.apply_delay_s})
+        self._ctl_wm = len(rv.decisions)
+        return out
+
+    def apply_controls(self, items: Sequence[dict]) -> None:
+        """Schedule remote swap commands received at a window barrier:
+        at ``t_apply`` the named stage re-binds to this shard's pilot for
+        the target tier and its local consumer fleet (if any) migrates
+        epoch-wise — the same code path the deciding shard runs."""
+        h = self.handle
+        for c in items:
+            pilot = self.control_pilots[c["to_tier"]]
+
+            def _swap(c=c, pilot=pilot):
+                si = h.pipe.rebind_stage(c["stage"], pilot)
+                h._migrate_stage(si)
+
+            h.sched.at(float(c["t_apply"]), _swap)
+
     def finish_row(self) -> dict:
         """Close the run and summarize this shard's deterministic
         columns (plus its raw latency data for exact cross-shard
@@ -219,6 +258,9 @@ class ShardRunner:
             row["sketch"] = sk.state() if sk is not None else None
         else:
             row["latencies"] = m.latencies("produced", "processed")
+        rv = getattr(self.executor, "readvisor", None)
+        if rv is not None:
+            row["swaps"] = [dict(s) for s in rv.swap_log]
         if self.mgr is not None:
             self.mgr.release_all()
         return row
@@ -260,7 +302,7 @@ def merge_rows(rows: Sequence[dict], *, streaming: bool) -> dict:
         # the exact-mode rank formula the single-process bench uses
         p50 = lat[n // 2] if n else 0.0
         p95 = lat[min(n - 1, int(0.95 * n))] if n else 0.0
-    return {
+    merged = {
         "processed": processed,
         "duplicates": sum(r["duplicates"] for r in rows),
         "events": sum(r["events"] for r in rows),
@@ -270,6 +312,11 @@ def merge_rows(rows: Sequence[dict], *, streaming: bool) -> dict:
         "lat_p95_s": p95,
         "wan_bytes": sum(r["wan_bytes"] for r in rows),
     }
+    if any("swaps" in r for r in rows):
+        # applied hot-swaps, in shard-id order (only the deciding shard
+        # logs them, so this is also decision order)
+        merged["swaps"] = [s for r in rows for s in r.get("swaps", ())]
+    return merged
 
 
 # ---------------------------------------------------------------------------
@@ -280,10 +327,10 @@ def merge_rows(rows: Sequence[dict], *, streaming: bool) -> dict:
 def _shard_worker(conn, build: Callable[[dict], ShardRunner],
                   cfg: dict) -> None:
     """Worker-process loop: build the shard, then serve the barrier
-    protocol — ``('put', items)`` injects boundary messages,
-    ``('adv', t)`` advances the window and returns ``('adv', done,
-    cpu_s, exports)``, ``('fin',)`` closes the run and returns its
-    row."""
+    protocol — ``('put', items)`` injects boundary messages, ``('ctl',
+    items)`` schedules remote swap commands, ``('adv', t)`` advances the
+    window and returns ``('adv', done, cpu_s, exports, controls)``,
+    ``('fin',)`` closes the run and returns its row."""
     runner = build(cfg)
     conn.send(("ready", runner.deadline))
     while True:
@@ -291,11 +338,14 @@ def _shard_worker(conn, build: Callable[[dict], ShardRunner],
         op = msg[0]
         if op == "put":
             runner.deliver(msg[1])
+        elif op == "ctl":
+            runner.apply_controls(msg[1])
         elif op == "adv":
             c0 = time.process_time()
             runner.advance(msg[1])
             cpu = time.process_time() - c0
-            conn.send(("adv", runner.done, cpu, runner.collect_exports()))
+            conn.send(("adv", runner.done, cpu, runner.collect_exports(),
+                       runner.collect_controls()))
         elif op == "fin":
             conn.send(("row", runner.finish_row()))
             conn.close()
@@ -335,8 +385,11 @@ class ShardCoordinator:
 
     # -- shared window loop ------------------------------------------------
 
-    def _window_loop(self, n: int, horizon: float, deliver, advance_all):
+    def _window_loop(self, n: int, horizon: float, deliver, advance_all,
+                     control=None):
         pending: Dict[int, List[Tuple]] = {i: [] for i in range(n)}
+        # re-advisory swap commands awaiting broadcast: (dest_sid, dict)
+        pending_ctl: Dict[int, List[dict]] = {i: [] for i in range(n)}
         t = 0.0
         # +4: slack for barrier rounds that only flush boundary queues
         max_windows = (int(math.ceil(horizon / self.window_s)) + 4
@@ -346,15 +399,27 @@ class ShardCoordinator:
                 if items:
                     deliver(sid, items)
                     pending[sid] = []
+            if control is not None:
+                for sid, items in pending_ctl.items():
+                    if items:
+                        control(sid, items)
+                        pending_ctl[sid] = []
             t_next = min(t + self.window_s, horizon)
-            done_flags, cpus, exports = advance_all(t_next)
+            done_flags, cpus, exports, controls = advance_all(t_next)
             self.windows += 1
             self.cpu_s_total += sum(cpus)
             self.cpu_critical_s += max(cpus) if cpus else 0.0
             for dest, hop, p, mid, key, raw, ready_at, produced_t in exports:
                 pending[dest].append((hop, p, mid, key, raw, ready_at,
                                       produced_t))
-            have_pending = any(pending.values())
+            # controls broadcast to every *other* shard (the decider
+            # already applied its own swap locally)
+            if control is not None:
+                for src, ctl in controls:
+                    for dest in range(n):
+                        if dest != src:
+                            pending_ctl[dest].append(ctl)
+            have_pending = any(pending.values()) or any(pending_ctl.values())
             if all(done_flags) and not have_pending:
                 break
             if t_next >= horizon and not have_pending:
@@ -377,17 +442,23 @@ class ShardCoordinator:
         def deliver(sid, items):
             self.runners[sid].deliver(items)
 
+        def control(sid, items):
+            self.runners[sid].apply_controls(items)
+
         def advance_all(t_next):
-            done, cpus, exports = [], [], []
+            done, cpus, exports, controls = [], [], [], []
             for r in self.runners:
                 c0 = time.process_time()
                 r.advance(t_next)
                 cpus.append(time.process_time() - c0)
                 done.append(r.done)
                 exports.extend(r.collect_exports())
-            return done, cpus, exports
+                for ctl in r.collect_controls():
+                    controls.append((r.shard_id, ctl))
+            return done, cpus, exports, controls
 
-        self._window_loop(len(self.runners), horizon, deliver, advance_all)
+        self._window_loop(len(self.runners), horizon, deliver, advance_all,
+                          control)
         return [r.finish_row() for r in self.runners]
 
     def _run_mp(self) -> List[dict]:
@@ -413,18 +484,23 @@ class ShardCoordinator:
             def deliver(sid, items):
                 conns[sid].send(("put", items))
 
+            def control(sid, items):
+                conns[sid].send(("ctl", items))
+
             def advance_all(t_next):
                 for conn in conns:
                     conn.send(("adv", t_next))
-                done, cpus, exports = [], [], []
-                for conn in conns:             # workers compute in parallel
-                    _, d, cpu, exp = conn.recv()
+                done, cpus, exports, controls = [], [], [], []
+                for sid, conn in enumerate(conns):  # parallel workers
+                    _, d, cpu, exp, ctl = conn.recv()
                     done.append(d)
                     cpus.append(cpu)
                     exports.extend(exp)
-                return done, cpus, exports
+                    controls.extend((sid, c) for c in ctl)
+                return done, cpus, exports, controls
 
-            self._window_loop(len(conns), horizon, deliver, advance_all)
+            self._window_loop(len(conns), horizon, deliver, advance_all,
+                              control)
             rows = []
             for conn in conns:
                 conn.send(("fin",))
@@ -627,3 +703,150 @@ def tier_cut_builders(cfg: dict) -> List[Tuple[Callable, dict]]:
     payload_bytes/seed/bandwidth_bps/rtt_s/timeout_s."""
     return [(build_tier_cut_shard, dict(cfg, side="edge")),
             (build_tier_cut_shard, dict(cfg, side="cloud"))]
+
+
+# ---------------------------------------------------------------------------
+# partitioning 3: the drift tier cut (sources + WAN + ReAdvisor | consumers)
+# ---------------------------------------------------------------------------
+
+
+#: columns a sharded drift run must reproduce bit-identically to the
+#: unsharded :func:`~repro.sim.scenarios.run_scenario` of the same
+#: scenario (``events`` counts shard machinery and is excluded)
+DRIFT_PARITY_COLS = ("processed", "duplicates", "makespan_s", "lat_p50_s",
+                     "lat_p95_s", "wan_bytes", "swaps")
+
+
+def build_drift_shard(cfg: dict) -> ShardRunner:
+    """One side of the tier cut for a drift/re-advisory scenario.
+
+    Both sides build the scenario's *full* pipeline via
+    :func:`~repro.sim.scenarios.build_pipeline` — same pilots, payload,
+    producer phase offsets, shapers and service model as the unsharded
+    run — then zero out the stage the other shard owns (an explicit
+    ``n_tasks=0``, which :meth:`stage_tasks` honors).
+
+    ``side == 'edge'`` (shard 0) keeps the sources, the live WAN shaper,
+    the scheduled drift events **and the ReAdvisor**: every produce-side
+    counter the advisor reads (``msgs_in``/``wan_delay_s``/``bytes_in``)
+    is stamped locally, so its decision timeline is bit-identical to the
+    unsharded run's.  Its swap re-prices the local shaper; the decision
+    ships to shard 1 over the control channel at the next barrier.
+
+    ``side == 'cloud'`` (shard 1) keeps the consumers and the tier-aware
+    service model; its executor gets no ReAdvisor and no drift plan —
+    remote swap commands arrive via :meth:`ShardRunner.apply_controls`
+    and re-bind the stage at the same virtual ``t_apply`` the deciding
+    shard used (guaranteed still in this shard's future as long as
+    ``window_s <= apply_delay_s``)."""
+    import dataclasses
+
+    from repro.sim.scenarios import build_pipeline
+
+    sc, side = cfg["sc"], cfg["side"]
+    pipe, ex, mgr = build_pipeline(sc)
+    rv = ex.readvisor
+    if side == "edge":
+        pipe.stages[1] = dataclasses.replace(pipe.stages[1], n_tasks=0)
+        handle = pipe.launch(ex, n_messages=sc.n_messages,
+                             timeout_s=sc.t_max_s, collect_results=False)
+        return ShardRunner(0, pipe, ex, handle, pipe.metrics,
+                           export_hops={0: 1}, mgr=mgr)
+    if side == "cloud":
+        pipe.stages[0] = dataclasses.replace(pipe.stages[0], n_tasks=0)
+        ex.readvisor = None     # decisions arrive via the control channel
+        ex.drift_plan = ()      # the charged WAN shaper lives on shard 0
+        handle = pipe.launch(ex, n_messages=sc.n_messages,
+                             timeout_s=sc.t_max_s, collect_results=False)
+        return ShardRunner(1, pipe, ex, handle, pipe.metrics,
+                           export_hops={},
+                           control_pilots=dict(rv.targets) if rv else {},
+                           mgr=mgr)
+    raise ValueError(f"side must be 'edge' or 'cloud', got {side!r}")
+
+
+def drift_builders(sc) -> List[Tuple[Callable, dict]]:
+    """The two-shard builder list for a drift/re-advisory scenario
+    (shard 0: sources + WAN + ReAdvisor, shard 1: consumers)."""
+    return [(build_drift_shard, {"sc": sc, "side": "edge"}),
+            (build_drift_shard, {"sc": sc, "side": "cloud"})]
+
+
+def _drift_window_s(sc) -> float:
+    """Safe conservative window for the drift tier cut: half the minimum
+    one-way link latency over every band the run can visit — the current
+    WAN band, every drift target band, and the routed link to every
+    re-advisory target tier.  The WanShaper charges ``rtt/2`` (plus
+    serialization) per message, so any window at or below this bound
+    keeps barrier delivery causal; re-advisory additionally requires
+    ``window <= apply_delay_s`` so a decision shipped at the next
+    barrier still lands in the receiving shard's future."""
+    from repro.sim.scenarios import _resolve_drift, _wan_link
+
+    cm = sc.cost_model.with_wan(sc.wan_band)
+    rtts = [_wan_link(sc).latency_s]
+    for d in _resolve_drift(sc):
+        if d.kind == "band" and d.rtt_s is not None:
+            rtts.append(d.rtt_s)
+    if sc.readvise is not None:
+        for tier in sc.readvise.targets:
+            if tier != "cloud":
+                rtts.append(cm.route("edge", tier).as_link().latency_s)
+    window = min(r / 2.0 for r in rtts)
+    if sc.readvise is not None:
+        window = min(window, sc.readvise.apply_delay_s)
+    return window
+
+
+def run_drift_sharded(sc, *, shards: int = 2, mode: str = "inline") -> dict:
+    """Run a drift/re-advisory scenario sharded across the tier cut;
+    returns the :data:`DRIFT_PARITY_COLS` projection (plus shard
+    accounting).  ``shards=1`` runs the plain unsharded
+    :func:`~repro.sim.scenarios.run_scenario` projected onto the same
+    columns — the parity baseline.
+
+    Refused configurations (the "too chatty to shard" conditions of
+    this cut): non-``cloud`` placements (the cut is the edge→cloud WAN
+    hop), open-loop arrivals (the golden's closed-loop producers keep
+    shard 0's timeline independent of consumer progress), failure
+    injection and autoscaling (both act on consumers the edge shard
+    can't see), and ``churn``/``outage`` drift kinds (they mutate the
+    consumer fleet — run those unsharded)."""
+    from repro.sim.scenarios import run_scenario
+
+    if shards not in (1, 2):
+        raise ValueError(f"drift sharding is the 2-way tier cut; "
+                         f"got shards={shards}")
+    if sc.placement != "cloud":
+        raise ValueError(f"drift sharding cuts the edge→cloud WAN hop; "
+                         f"placement {sc.placement!r} is not shardable")
+    if sc.arrival is not None:
+        raise ValueError("drift sharding needs closed-loop producers; "
+                         "open-loop arrival scenarios run unsharded")
+    if sc.failures or sc.autoscale is not None or sc.autoscale_stages:
+        raise ValueError("failure injection / autoscaling act on the "
+                         "consumer fleet across the cut — run unsharded")
+    for d in sc.drift:
+        if d.kind != "band":
+            raise ValueError(f"drift kind {d.kind!r} mutates the consumer "
+                             f"fleet across the cut — run unsharded")
+    if shards == 1:
+        res = run_scenario(sc)
+        return {
+            "processed": res.n_processed,
+            "duplicates": res.n_duplicates,
+            "makespan_s": res.makespan_s,
+            "lat_p50_s": res.latency_p50_s,
+            "lat_p95_s": res.latency_p95_s,
+            "wan_bytes": res.wan_bytes,
+            "swaps": [dict(s) for s in res.swaps],
+            "shards": 1, "mode": "unsharded", "windows": 1,
+        }
+    coord = ShardCoordinator(drift_builders(sc),
+                             window_s=_drift_window_s(sc), mode=mode)
+    rows = coord.run()
+    merged = merge_rows(rows, streaming=False)
+    out = {k: merged[k] for k in DRIFT_PARITY_COLS if k != "swaps"}
+    out["swaps"] = merged.get("swaps", [])
+    out.update({"shards": 2, "mode": mode, "windows": coord.windows})
+    return out

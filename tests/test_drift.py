@@ -1,0 +1,329 @@
+"""Chaos suite: mid-run drift events, the watching ReAdvisor, and live
+placement hot-swap.
+
+Every drift kind (band / churn / outage) is scheduled as an ordinary DES
+event, so drifted runs stay bit-identical — the per-kind goldens here
+pin that three sweeps deep.  The band-drop golden is the headline
+(benchmarks/bench_drift.py runs the same cell): a cloud placement's WAN
+degrades 100→10 Mbit/s at t=8 s, the ReAdvisor notices the observed hop
+delay blow past its prediction and hot-swaps the processing stage
+cloud→fog (``rebind_stage`` + epoch consumer migration), and the
+end-to-end p95 beats the static run — with identical swap timestamps
+under shard counts 1 and 2.  The chaos matrix crosses each drift kind
+with crash/silent consumer failures under straggler speculation and
+holds the exactly-once and speculation-accounting invariants.
+"""
+import time
+from dataclasses import replace
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.core import (ComputeResource, ContinuumPipeline, PilotManager,
+                        StageSpec, ThreadedExecutor)
+from repro.cost.advisor import PlacementAdvisor
+from repro.cost.model import default_cost_model
+from repro.cost.readvisor import ReAdvisor, ReAdviseSpec
+from repro.sim.scenarios import (DriftSpec, FailureSpec, Scenario,
+                                 run_scenario)
+from repro.sim.shard import DRIFT_PARITY_COLS, run_drift_sharded
+
+# ---------------------------------------------------------------------------
+# the band-drop golden (same cell bench_drift.py reports)
+# ---------------------------------------------------------------------------
+
+GOLDEN = Scenario(
+    placement="cloud", wan_band="100mbit", n_messages=60, n_points=25_000,
+    gen_s_per_point=1.28e-4, seed=3, speculative_factor=2.0,
+    drift=(DriftSpec(at_s=8.0, kind="band", band="10mbit"),),
+    readvise=ReAdviseSpec(interval_s=2.0, min_samples=2, hysteresis=3.0),
+)
+
+
+def test_band_drop_golden_hot_swap_beats_static():
+    static = run_scenario(replace(GOLDEN, readvise=None))
+    res = run_scenario(GOLDEN)
+
+    # the drift landed in both runs, as a scheduled event
+    assert static.metrics.events("drift_band")
+    assert res.metrics.events("drift_band")
+    assert static.drift_events == res.drift_events == 1
+
+    # the static run rides out the degraded band; the re-advised run
+    # hot-swaps cloud→fog and recovers the tail
+    assert static.swaps == []
+    assert len(res.swaps) == 1
+    swap = res.swaps[0]
+    assert swap["stage"] == "process_cloud"
+    assert (swap["from"], swap["to"]) == ("cloud", "fog")
+    assert swap["t_decided"] > 8.0            # after the drift, not before
+    assert swap["t_applied"] == pytest.approx(
+        swap["t_decided"] + GOLDEN.readvise.apply_delay_s)
+    assert res.tiers[-1] == "fog"
+    assert static.tiers[-1] == "cloud"
+    assert res.latency_p95_s < static.latency_p95_s
+    assert res.makespan_s < static.makespan_s
+
+    # the full decision→rebind→migrate chain is observable
+    assert res.metrics.events("readvise_decision")
+    assert res.metrics.events("stage_rebound")
+    assert res.metrics.events("consumer_drained")
+
+    # exactly-once across the migration: the epoch hand-off re-delivers
+    # through the at-least-once path and dedup keeps the output unique
+    assert res.n_processed == GOLDEN.n_messages
+    assert res.n_duplicates == 0
+
+
+def test_band_drop_golden_bit_identical():
+    rows = [run_scenario(GOLDEN).row() for _ in range(3)]
+    # swap timestamps and speculation counters included
+    assert rows[0] == rows[1] == rows[2]
+    assert rows[0]["swaps"][0]["t_decided"] == rows[0]["swaps"][0]["t_decided"]
+
+
+def test_band_drop_golden_shard_parity():
+    base = run_drift_sharded(GOLDEN, shards=1)
+    cut = run_drift_sharded(GOLDEN, shards=2, mode="inline")
+    for col in DRIFT_PARITY_COLS:
+        assert cut[col] == base[col], (
+            f"{col} drifts across the tier cut: {cut[col]!r} "
+            f"!= {base[col]!r}")
+    assert base["swaps"] and base["swaps"][0]["to"] == "fog"
+    assert cut["windows"] > 1           # conservative sync actually ran
+
+
+def test_band_drop_golden_shard_mp_matches_inline():
+    a = run_drift_sharded(GOLDEN, shards=2, mode="inline")
+    b = run_drift_sharded(GOLDEN, shards=2, mode="mp")
+    for col in DRIFT_PARITY_COLS:
+        assert a[col] == b[col]
+
+
+def test_drift_sharding_refuses_unshardable_cells():
+    with pytest.raises(ValueError):
+        run_drift_sharded(GOLDEN, shards=4)
+    with pytest.raises(ValueError):
+        run_drift_sharded(replace(GOLDEN, placement="fog"))
+    with pytest.raises(ValueError):    # churn mutates the consumer fleet
+        run_drift_sharded(replace(
+            GOLDEN, drift=(DriftSpec(at_s=1.0, kind="churn", delta=-1),)))
+    with pytest.raises(ValueError):    # failures act across the cut
+        run_drift_sharded(replace(
+            GOLDEN, failures=(FailureSpec(at_s=1.0, consumer_idx=0),)))
+
+
+# ---------------------------------------------------------------------------
+# hysteresis: within tolerance the advisor stays put
+# ---------------------------------------------------------------------------
+
+def test_quiet_run_never_swaps():
+    # same watched run, no drift: the healthy band keeps the observed
+    # hop within hysteresis of the prediction, so no decision ever fires
+    res = run_scenario(replace(GOLDEN, drift=()))
+    assert res.swaps == []
+    assert not res.metrics.events("readvise_decision")
+    assert res.tiers[-1] == "cloud"
+    assert res.n_processed == GOLDEN.n_messages
+
+
+class _FakeMetrics:
+    """counter()-compatible stand-in for a broker topic's produce
+    counters, advanced by hand between ticks."""
+
+    def __init__(self):
+        self.c = {"topic.t.msgs_in": 0.0, "topic.t.wan_delay_s": 0.0,
+                  "topic.t.bytes_in": 0.0}
+
+    def counter(self, name):
+        return self.c[name]
+
+    def push(self, msgs, mean_delay, mean_bytes):
+        self.c["topic.t.msgs_in"] += msgs
+        self.c["topic.t.wan_delay_s"] += msgs * mean_delay
+        self.c["topic.t.bytes_in"] += msgs * mean_bytes
+
+
+def _readvisor(**kw):
+    pilot = lambda n: SimpleNamespace(resource=SimpleNamespace(n_workers=n))
+    kw.setdefault("targets", {"cloud": pilot(4), "fog": pilot(4)})
+    kw.setdefault("flops", 1e9)
+    rv = ReAdvisor(default_cost_model().with_wan("100mbit"),
+                   stage="process_cloud", **kw)
+    rv.begin(0.0)
+    return rv
+
+
+def test_readvisor_hysteresis_and_min_samples():
+    rv = _readvisor(hysteresis=3.0, min_samples=8, interval_s=1.0)
+    m = _FakeMetrics()
+    step = lambda t: rv.step(now=t, metrics=m, topic="t",
+                             current_tier="cloud", src_tier="edge")
+
+    # too few samples in the window: abstain, whatever the delay says
+    m.push(4, 100.0, 6.4e6)
+    assert step(1.0) is None
+    # healthy window (observed ≈ predicted): within hysteresis, stay put
+    m.push(10, 0.6, 6.4e6)
+    assert step(2.0) is None
+    # degraded window: observed hop dwarfs the fog score → swap decision
+    m.push(10, 30.0, 6.4e6)
+    dec = step(3.0)
+    assert dec is not None
+    assert (dec.from_tier, dec.to_tier) == ("cloud", "fog")
+    assert dec.scores["cloud"] > 3.0 * dec.scores["fog"]
+    # the budget is spent at decision time: the next degraded window
+    # cannot emit a duplicate while the first swap is still in flight
+    m.push(10, 30.0, 6.4e6)
+    assert step(4.0) is None
+
+
+def test_readvisor_validates_knobs():
+    with pytest.raises(ValueError):
+        _readvisor(hysteresis=0.5)
+    with pytest.raises(ValueError):
+        _readvisor(targets={})
+
+
+def test_threaded_executor_readvises_live():
+    """The wall-clock path: a daemon monitor thread ticks the ReAdvisor,
+    re-binds the watched stage mid-run and spawns a replacement fleet —
+    the run still delivers every result exactly once."""
+    mgr = PilotManager(devices=())
+    dev = mgr.submit_pilot(ComputeResource(tier="device", n_workers=2))
+    edge = mgr.submit_pilot(ComputeResource(tier="edge", n_workers=2))
+    fog = mgr.submit_pilot(ComputeResource(tier="fog", n_workers=2))
+
+    def process(ctx, data=None):
+        time.sleep(0.02)               # keep the run alive past a tick
+        return float(np.sum(data))
+
+    pipe = ContinuumPipeline(stages=[
+        StageSpec("sense", lambda ctx: np.arange(64, dtype=np.float64),
+                  pilot=dev),
+        StageSpec("process", process, pilot=edge),
+    ])
+    # 1e12 flops price edge at ~100 s vs fog at ~25 s per message — the
+    # ranking favours fog by 4x, far past hysteresis, so the first tick
+    # that observes any traffic decides the swap
+    rv = ReAdvisor(default_cost_model(), stage="process", flops=1e12,
+                   targets={"edge": edge, "fog": fog},
+                   interval_s=0.05, hysteresis=2.0, min_samples=1,
+                   cooldown_s=0.0, max_swaps=1, apply_delay_s=0.0)
+    res = pipe.run(n_messages=24, timeout_s=60.0,
+                   scheduler=ThreadedExecutor(), readvise=rv)
+    assert res.n_processed == 24
+    assert res.results == [float(np.sum(np.arange(64.0)))] * 24
+    assert rv.swap_log
+    assert rv.swap_log[0]["from"] == "edge"
+    assert rv.swap_log[0]["to"] == "fog"
+    assert pipe.stages[1].pilot.tier == "fog"
+    assert res.metrics.events("stage_rebound")
+    mgr.release_all()
+
+
+# ---------------------------------------------------------------------------
+# per-kind drift goldens: every kind is an ordinary, reproducible event
+# ---------------------------------------------------------------------------
+
+_BASE = dict(placement="cloud", wan_band="100mbit", n_messages=48, seed=1)
+
+_KIND_DRIFTS = {
+    "band": DriftSpec(at_s=0.05, kind="band", band="10mbit",
+                      restore_after_s=0.1),
+    "churn": DriftSpec(at_s=0.05, kind="churn", delta=-2,
+                       restore_after_s=0.1),
+    "outage": DriftSpec(at_s=0.05, kind="outage", tier="cloud",
+                        restore_after_s=0.1),
+}
+
+
+@pytest.mark.parametrize("kind", sorted(_KIND_DRIFTS))
+def test_drift_kind_golden_bit_identical(kind):
+    sc = Scenario(drift=(_KIND_DRIFTS[kind],), **_BASE)
+    runs = [run_scenario(sc) for _ in range(3)]
+    rows = [r.row() for r in runs]
+    assert rows[0] == rows[1] == rows[2]
+    res = runs[0]
+    assert res.metrics.events(f"drift_{kind}")
+    assert res.metrics.events(f"drift_{kind}_restored")
+    # the drift perturbs but never loses work
+    assert res.n_processed == _BASE["n_messages"]
+
+
+def test_drift_band_restore_reprices_back():
+    # a band dip with a restore: slower than the clean run while degraded,
+    # but it completes, and both shaper events are on record
+    clean = run_scenario(Scenario(**_BASE))
+    dipped = run_scenario(Scenario(drift=(_KIND_DRIFTS["band"],), **_BASE))
+    assert dipped.metrics.events("drift_band")
+    assert dipped.metrics.events("drift_band_restored")
+    assert dipped.n_processed == clean.n_processed
+    assert dipped.makespan_s >= clean.makespan_s
+
+
+def test_drift_outage_loses_then_respawns_consumers():
+    res = run_scenario(Scenario(drift=(_KIND_DRIFTS["outage"],), **_BASE))
+    ev = res.metrics.events("drift_outage")
+    assert ev and ev[0]["tier"] == "cloud"
+    assert res.metrics.events("drift_outage_restored")
+    assert res.n_processed == _BASE["n_messages"]
+
+
+def test_drift_validation():
+    with pytest.raises(ValueError):   # unknown band name
+        run_scenario(Scenario(
+            drift=(DriftSpec(at_s=0.1, kind="band", band="3mbit"),),
+            **_BASE))
+    with pytest.raises(ValueError):   # unknown band table
+        run_scenario(Scenario(
+            drift=(DriftSpec(at_s=0.1, kind="band", band="10mbit",
+                             table="lan"),),
+            **_BASE))
+
+
+# ---------------------------------------------------------------------------
+# chaos matrix: drift × consumer failure × speculation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fkind", ["crash", "silent"])
+@pytest.mark.parametrize("dkind", sorted(_KIND_DRIFTS))
+def test_chaos_matrix_exactly_once_and_spec_accounting(dkind, fkind):
+    sc = Scenario(
+        drift=(_KIND_DRIFTS[dkind],),
+        failures=(FailureSpec(at_s=0.2, consumer_idx=0,
+                              restart_after_s=0.3, kind=fkind),),
+        speculative_factor=2.0, **_BASE)
+    res = run_scenario(sc)
+    # exactly-once output survives drift + failure + speculation at once
+    assert res.n_processed == _BASE["n_messages"]
+    # every speculative launch is accounted for — no leaked races
+    assert (res.spec_wins + res.spec_losses + res.spec_cancelled
+            == res.spec_launches)
+    # and the whole chaos cell is still deterministic
+    assert run_scenario(sc).row() == res.row()
+
+
+# ---------------------------------------------------------------------------
+# advisor metro-band sweep (the static advisory's fog-hop knob)
+# ---------------------------------------------------------------------------
+
+def test_advisor_metro_band_sweep_varies_fog_cells():
+    adv = PlacementAdvisor(n_messages=8, service_sigma=0.0)
+    rep = adv.advise("kmeans", placements=("fog", "cloud"),
+                     bands=("10mbit",),
+                     metro_bands=("10mbit", "100mbit"))
+    fog = [c for c in rep.cells if c.placement == "fog"]
+    cloud = [c for c in rep.cells if c.placement == "cloud"]
+    assert sorted(c.metro_band for c in fog) == ["100mbit", "10mbit"]
+    assert len(set(c.latency_p95_s for c in fog)) == 2   # the hop matters
+    assert all(c.metro_band is None for c in cloud)      # no metro hop
+    assert all(c.row()["metro"] == c.metro_band for c in rep.cells)
+
+
+def test_advisor_metro_band_sweep_validates_names():
+    adv = PlacementAdvisor(n_messages=8)
+    with pytest.raises(ValueError):
+        adv.advise("kmeans", placements=("fog",), bands=("10mbit",),
+                   metro_bands=("900mbit",))
