@@ -67,6 +67,9 @@ class TaskProfile:
     output_tier: Optional[str] = None  # where the output must land
     preferred_tiers: Sequence[str] = ()
     memory_gb: float = 0.0
+    precision: str = "fp32"            # kernel precision variant (fp32 |
+    #                                    bf16 | int8): compute is priced at
+    #                                    the pilot tier's precision peak
 
 
 @dataclass
@@ -106,26 +109,29 @@ class PlacementEngine:
         self.device_flops = (device_flops if device_flops is not None
                              else self.cost.tier_flops("cloud"))
 
-    def tier_rate(self, tier: str) -> float:
-        """Per-device peak FLOP/s of a tier: the override when set, else
-        the profile's device rate.  Tiers the profile doesn't know price
-        conservatively at the *slowest* known tier's rate — an optimistic
-        (fast) guess would bias auto-placement onto unmodeled tiers."""
+    def tier_rate(self, tier: str, precision: str = "fp32") -> float:
+        """Per-device peak FLOP/s of a tier at a kernel precision: the
+        override when set (overrides are fp32 back-compat knobs and stay
+        unscaled), else the profile's device rate × its precision
+        speedup.  Tiers the profile doesn't know price conservatively at
+        the *slowest* known tier's rate — an optimistic (fast) guess
+        would bias auto-placement onto unmodeled tiers."""
         rate = self._tier_overrides.get(tier)
         if rate is not None:
             return rate
         try:
-            return self.cost.tier_flops(tier)
+            return self.cost.tier_flops(tier, 1, precision)
         except KeyError:
             rates = [tp.device.peak_flops
                      for tp in self.cost.profile.tiers.values()]
             return min(rates) if rates else self.device_flops
 
-    def pilot_flops(self, pilot: Pilot) -> float:
+    def pilot_flops(self, pilot: Pilot, precision: str = "fp32") -> float:
         if pilot.mesh is not None:
             # mesh pilots aggregate cloud-class accelerator devices
-            return self.tier_rate(pilot.tier) * len(pilot.devices)
-        return self.tier_rate(pilot.tier) * pilot.resource.n_workers
+            return self.tier_rate(pilot.tier, precision) * len(pilot.devices)
+        return self.tier_rate(pilot.tier, precision) \
+            * pilot.resource.n_workers
 
     def estimate(self, task: TaskProfile, pilot: Pilot,
                  queue_depth: int = 0) -> PlacementDecision:
@@ -140,7 +146,8 @@ class PlacementEngine:
                                     self.links, profile)
             t_out = (task.output_bytes / move_out.bandwidth
                      + move_out.latency_s)
-        t_compute = task.flops / max(self.pilot_flops(pilot), 1.0)
+        t_compute = task.flops / max(
+            self.pilot_flops(pilot, task.precision), 1.0)
         t_queue = queue_depth * max(t_compute, 1e-6)
         penalty = 0.0
         if task.preferred_tiers and pilot.tier not in task.preferred_tiers:

@@ -76,11 +76,19 @@ class Advice:
     spec_wins: int = 0
     spec_losses: int = 0
     spec_cancelled: int = 0
+    # the precision placement axis: the model's kernel precision and its
+    # assignment-agreement rate vs the fp32 reference on the fixed
+    # MiniAppGenerator probe (1.0 for fp32 models; the accuracy half of
+    # every accuracy-vs-latency precision cell)
+    precision: str = "fp32"
+    agreement_vs_fp32: float = 1.0
 
     def row(self) -> Dict[str, object]:
         return {"model": self.model, "placement": self.placement,
                 "tiers": list(self.tiers),
                 "wan": self.wan_band,
+                "precision": self.precision,
+                "agreement_vs_fp32": self.agreement_vs_fp32,
                 "msgs_per_s": self.throughput_msgs_s,
                 "lat_mean_s": self.latency_mean_s,
                 "lat_p50_s": self.latency_p50_s,
@@ -247,6 +255,14 @@ class PlacementAdvisor:
             spec = model_specs(self.cost)[model]
         else:
             spec = model
+        # accuracy half of the precision axis: assignment agreement vs
+        # the fp32 reference on the fixed probe (deterministic, cached;
+        # jax only loads for actual reduced-precision specs)
+        if spec.precision == "fp32":
+            agreement = 1.0
+        else:
+            from repro.ml.kmeans import assignment_agreement
+            agreement = assignment_agreement(spec.precision)
         cells: List[Advice] = []
         if bands is None:
             # this cost model's own bands (a custom profile sweeps *its*
@@ -311,6 +327,8 @@ class PlacementAdvisor:
                         spec_wins=r.spec_wins,
                         spec_losses=r.spec_losses,
                         spec_cancelled=r.spec_cancelled,
+                        precision=spec.precision,
+                        agreement_vs_fp32=agreement,
                         tier_estimates=dict(r.placement_estimates)))
         return AdvisorReport(model=spec.name, cells=cells,
                              latency_budget=latency_budget,

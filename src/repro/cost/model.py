@@ -74,16 +74,20 @@ class CostModel:
         :meth:`~repro.cost.profiles.ContinuumProfile.route`)."""
         return self.profile.route(src, dst, nbytes)
 
-    def tier_flops(self, tier: str, n_workers: int = 1) -> float:
-        """Aggregate peak FLOP/s of ``n_workers`` devices of a tier."""
-        return self.profile.tier(tier).device.peak_flops * max(n_workers, 1)
+    def tier_flops(self, tier: str, n_workers: int = 1,
+                   precision: str = "fp32") -> float:
+        """Aggregate peak FLOP/s of ``n_workers`` devices of a tier, at a
+        kernel precision (reduced-precision datapaths run at a multiple of
+        the fp32 peak — see :meth:`DeviceProfile.speedup`)."""
+        dev = self.profile.tier(tier).device
+        return dev.peak_flops * dev.speedup(precision) * max(n_workers, 1)
 
     # -- primitive estimates ----------------------------------------------
 
-    def compute_s(self, flops: float, tier: str,
-                  n_workers: int = 1) -> float:
+    def compute_s(self, flops: float, tier: str, n_workers: int = 1,
+                  precision: str = "fp32") -> float:
         """Seconds to execute ``flops`` (peak-rate-equivalent) on a tier."""
-        return flops / max(self.tier_flops(tier, n_workers), 1.0)
+        return flops / max(self.tier_flops(tier, n_workers, precision), 1.0)
 
     def transfer_s(self, nbytes: float, src: str, dst: str) -> float:
         """Seconds to move ``nbytes`` between tiers (0 bytes = free),
@@ -97,10 +101,11 @@ class CostModel:
 
     def model_compute_s(self, model: str, n_points: int, tier: str,
                         n_workers: int = 1) -> float:
-        """Full-model service time for one ``n_points`` message."""
+        """Full-model service time for one ``n_points`` message, priced at
+        the tier's peak for the model's calibrated kernel precision."""
         mc = self.model_cost(model)
         return self.compute_s(mc.effective_flops_per_point * n_points,
-                              tier, n_workers)
+                              tier, n_workers, mc.precision)
 
     def preprocess_s(self, model: str, n_points: int, tier: str,
                      n_workers: int = 1) -> float:
@@ -161,7 +166,9 @@ class CostModel:
 
     def tier_service_model(self, stage_flops: Mapping[str, float], *,
                            resolve: Callable[[str], Tuple[str, int]],
-                           sigma: float = 0.0, seed: int = 0
+                           sigma: float = 0.0, seed: int = 0,
+                           stage_precision: Optional[Mapping[str, str]]
+                           = None
                            ) -> Callable[[str, object, object], float]:
         """Like :meth:`service_model`, but per-stage *FLOPs* are priced at
         the tier a stage executes on **at charge time** — ``resolve(stage)``
@@ -171,8 +178,13 @@ class CostModel:
         charge runs at the fog device's peak rate, with no service-model
         rebuild.  Noise draws (``sigma > 0``) come from the same seeded
         stream as :meth:`service_model`, in charge order, so swapped runs
-        stay bit-reproducible under the single-threaded SimExecutor."""
+        stay bit-reproducible under the single-threaded SimExecutor.
+
+        ``stage_precision`` names the kernel precision a stage's flops run
+        at (default fp32) — a quantized model's compute stage is priced at
+        the resolved tier's int8 peak, whatever tier it lands on."""
         flops = dict(stage_flops)
+        precision = dict(stage_precision or {})
         if sigma > 0.0:
             import threading
 
@@ -188,7 +200,8 @@ class CostModel:
             if f <= 0.0:
                 return 0.0
             tier, workers = resolve(stage)
-            t = self.compute_s(f, tier, workers)
+            t = self.compute_s(f, tier, workers,
+                               precision.get(stage, "fp32"))
             if rng is None:
                 return t
             with lock:

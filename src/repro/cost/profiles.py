@@ -178,19 +178,45 @@ class Topology:
 
 @dataclass(frozen=True)
 class DeviceProfile:
-    """Sustained peak rates of one device class."""
+    """Sustained peak rates of one device class.
+
+    ``bf16_speedup``/``int8_speedup`` are the peak-rate multipliers a
+    reduced-precision kernel variant enjoys on this device class — the
+    hardware half of the precision placement axis.  Narrow-datapath SIMD
+    roughly doubles per precision halving on general-purpose cores; the
+    sensing SoC carries an NPU-class int8 path (the usual edge-accelerator
+    story: int8 MACs are an order of magnitude denser than fp32).
+    """
     name: str
-    peak_flops: float              # FLOP/s at full efficiency
+    peak_flops: float              # FLOP/s at full efficiency (fp32)
     mem_bw: float = 0.0            # bytes/s (roofline memory term)
     memory_gb: float = 4.0
+    bf16_speedup: float = 2.0
+    int8_speedup: float = 4.0
+
+    def speedup(self, precision: str = "fp32") -> float:
+        """Peak-rate multiplier for a kernel precision variant."""
+        if precision == "fp32":
+            return 1.0
+        if precision == "bf16":
+            return self.bf16_speedup
+        if precision == "int8":
+            return self.int8_speedup
+        raise ValueError(f"unknown precision {precision!r}")
 
 
 # The continuum's device classes, sensor to datacenter. Device = the
 # sensing SoC next to the data; edge = RasPi-class (1 core / 4 GB Dask
 # task); fog = a metro gateway box between edge site and datacenter;
 # cloud/hpc = one EC2-class worker core-set per Dask worker.
-DEVICE_SOC = DeviceProfile("device-soc", peak_flops=1e9, mem_bw=1e9,
-                           memory_gb=0.5)
+#
+# The sensing SoC is the precision story's extreme point: an FPU-less
+# MCU core does *software-emulated* fp32 at ~10 MFLOP/s, but carries a
+# micro-NPU/DSP int8 path (Coral/K210-class) two orders of magnitude
+# denser — fp32 models are infeasible where their int8 variants are not.
+DEVICE_SOC = DeviceProfile("device-soc", peak_flops=1e7, mem_bw=1e9,
+                           memory_gb=0.5, bf16_speedup=4.0,
+                           int8_speedup=100.0)
 RASPI_4B = DeviceProfile("raspi-4b", peak_flops=5e9, mem_bw=4e9,
                          memory_gb=4.0)
 FOG_NODE = DeviceProfile("fog-node", peak_flops=20e9, mem_bw=10e9,

@@ -10,6 +10,7 @@ import jax
 
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.kmeans import kmeans_assign as _kmeans_assign
+from repro.kernels.kmeans import kmeans_assign_update as _kmeans_fused
 from repro.kernels.ssd import ssd_chunk_scan as _ssd
 
 
@@ -23,9 +24,17 @@ def flash_attention(q, k, v, *, causal: bool = True, window=None,
                   block_k=block_k, interpret=_interpret())
 
 
-def kmeans_assign(points, centroids, *, block_n: int = 256):
+def kmeans_assign(points, centroids, *, block_n: int = 256,
+                  precision: str = "fp32"):
     return _kmeans_assign(points, centroids, block_n=block_n,
-                          interpret=_interpret())
+                          precision=precision, interpret=_interpret())
+
+
+def kmeans_assign_update(points, centroids, *, block_n: int = 256,
+                         precision: str = "fp32"):
+    """Fused assign+update: (ids, dmin, sums (K,F), counts (K,))."""
+    return _kmeans_fused(points, centroids, block_n=block_n,
+                         precision=precision, interpret=_interpret())
 
 
 def ssd_chunk_scan(xh, dt, A, B_, C_, D, *, chunk: int = 256):

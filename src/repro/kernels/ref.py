@@ -46,6 +46,33 @@ def kmeans_assign_ref(points, centroids):
     return ids, dmin
 
 
+def kmeans_assign_update_ref(points, centroids):
+    """Two-pass oracle for the fused assign+update kernel: assignment via
+    :func:`kmeans_assign_ref`, then an explicit (K,N) one-hot matmul for
+    the per-centroid sums/counts.  Returns (ids, dmin, sums (K,F) f32,
+    counts (K,) f32)."""
+    ids, dmin = kmeans_assign_ref(points, centroids)
+    k = centroids.shape[0]
+    onehot = jax.nn.one_hot(ids, k, dtype=jnp.float32)       # (N, K)
+    sums = onehot.T @ points.astype(jnp.float32)             # (K, F)
+    counts = jnp.sum(onehot, axis=0)                         # (K,)
+    return ids, dmin, sums, counts
+
+
+def kmeans_assign_update_int8_ref(points, centroids):
+    """int8 oracle: fake-quantize points/centroids with the shared
+    per-feature scales, then run the exact fp32 two-pass oracle on the
+    rounded values — precisely what the int8 kernel computes (sums are
+    dequantized-point sums)."""
+    from repro.kernels import quant
+
+    xf = points.astype(jnp.float32)
+    cf = centroids.astype(jnp.float32)
+    scales = quant.symmetric_scales(xf, cf)
+    return kmeans_assign_update_ref(quant.fake_quantize(xf, scales),
+                                    quant.fake_quantize(cf, scales))
+
+
 def ssd_ref(xh, dt, A, B_, C_, D):
     """Sequential (exact) SSD recurrence — the slow oracle.
 

@@ -6,13 +6,34 @@ updates are managed via the parameter service". We implement exactly that:
 
 * ``assign(points)`` — nearest-centroid ids + distances (inference /
   outlier score). The assignment hot loop has a Pallas TPU kernel
-  (kernels/kmeans.py) selected with ``impl='pallas'``; the default jnp path
-  is numerically identical (kernels/ref.py *is* this math).
-* ``update(points)`` — one mini-batch k-means step (Sculley 2010): per-seen-
-  count learning rates, so repeated messages converge like the paper's
-  streaming updates.
-* ``outlier_scores(points)`` — distance to the assigned centroid; thresholded
-  at ``mean + 3·std`` of running distances.
+  (kernels/kmeans.py) selected with ``impl='pallas'``; the jnp paths are
+  numerically identical (kernels/ref.py *is* this math).
+* ``update(points)`` / ``assign_update(points)`` — one mini-batch k-means
+  step (Sculley 2010): per-seen-count learning rates, so repeated messages
+  converge like the paper's streaming updates.  The step is *fused* with
+  assignment: one pass over the points yields ids, distances and the
+  per-centroid sums/counts the update needs.
+* ``outlier_scores(points)`` — distance to the assigned centroid;
+  thresholded at ``mean + 3·std`` of running distances.
+
+Implementation axis (``impl``):
+
+* ``"fused"`` (default) — single pass: distance expansion + scatter-add
+  (``segment_sum``) membership statistics.  This is the lowering
+  ``cost/calibrate.py`` rooflines, and the HLO-visible proxy for the
+  fused Pallas kernel (custom-calls are free to the HLO cost model).
+* ``"pallas"`` — the fused Pallas TPU kernel
+  (:func:`repro.kernels.ops.kmeans_assign_update`).
+* ``"jnp"`` — the historical two-pass path (assign, then an (N,K) one-hot
+  matmul).  Kept as the parity/benchmark baseline.
+
+Precision axis (``precision``): ``fp32`` | ``bf16`` | ``int8``.  The jnp
+paths *simulate* the reduced-precision kernels bit-faithfully — bf16
+rounds points/centroids to bfloat16, int8 fake-quantizes both with the
+shared per-feature scales from :mod:`repro.kernels.quant` — so
+``KMeans(impl='fused', precision='int8')`` and the int8 Pallas kernel
+agree on assignments, and :func:`assignment_agreement` can score a
+precision variant against the fp32 reference without TPU hardware.
 
 State is a plain pytree ``{"centroids", "counts"}`` so it round-trips the
 ParameterService and checkpoints unchanged.
@@ -27,12 +48,27 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+IMPLS = ("fused", "pallas", "jnp")
+PRECISIONS = ("fp32", "bf16", "int8")
 
-@partial(jax.jit, static_argnames=("impl",))
-def _assign(centroids, points, impl: str = "jnp"):
-    if impl == "pallas":
-        from repro.kernels import ops as kops
-        return kops.kmeans_assign(points, centroids)
+
+def _precision_view(centroids, points, precision: str):
+    """The fp32 values a reduced-precision kernel actually computes on."""
+    if precision == "fp32":
+        return centroids, points
+    if precision == "bf16":
+        return (centroids.astype(jnp.bfloat16).astype(jnp.float32),
+                points.astype(jnp.bfloat16).astype(jnp.float32))
+    if precision == "int8":
+        from repro.kernels import quant
+        scales = quant.symmetric_scales(points, centroids)
+        return (quant.fake_quantize(centroids, scales),
+                quant.fake_quantize(points, scales))
+    raise ValueError(f"precision must be one of {PRECISIONS}, "
+                     f"got {precision!r}")
+
+
+def _expansion_assign(centroids, points):
     # ||x-c||^2 = ||x||^2 - 2 x.c + ||c||^2 (MXU-matmul form)
     x2 = jnp.sum(points * points, axis=1, keepdims=True)
     c2 = jnp.sum(centroids * centroids, axis=1)
@@ -43,19 +79,63 @@ def _assign(centroids, points, impl: str = "jnp"):
     return ids, dmin
 
 
-@jax.jit
-def _update(centroids, counts, points):
-    """Mini-batch k-means step (per-count learning rate)."""
-    ids, _ = _assign(centroids, points)
+@partial(jax.jit, static_argnames=("impl", "precision"))
+def _assign(centroids, points, impl: str = "fused",
+            precision: str = "fp32"):
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        return kops.kmeans_assign(points, centroids, precision=precision)
+    centroids, points = _precision_view(centroids, points, precision)
+    return _expansion_assign(centroids, points)
+
+
+@partial(jax.jit, static_argnames=("impl", "precision"))
+def _assign_update(centroids, counts, points, impl: str = "fused",
+                   precision: str = "fp32"):
+    """Fused mini-batch k-means step: one pass over ``points`` returns
+    ``(new_centroids, new_counts, ids, dmin)``."""
     k = centroids.shape[0]
-    onehot = jax.nn.one_hot(ids, k, dtype=points.dtype)          # (N,K)
-    batch_counts = onehot.sum(0)                                  # (K,)
-    sums = onehot.T @ points                                      # (K,F)
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        ids, dmin, sums, batch_counts = kops.kmeans_assign_update(
+            points, centroids, precision=precision)
+    else:
+        # sums accumulate the *precision view* of the points, not the raw
+        # fp32 values: a quantized kernel only ever holds quantized data,
+        # so the bit-faithful sim must update centroids from the same
+        # dequantized values the kernel sums in VMEM
+        cv, pv = _precision_view(centroids, points, precision)
+        ids, dmin = _expansion_assign(cv, pv)
+        if impl == "jnp":
+            # historical two-pass baseline: assign, then an (N,K) one-hot
+            # materialization and a (K,N)@(N,F) matmul
+            onehot = jax.nn.one_hot(ids, k, dtype=jnp.float32)
+            batch_counts = onehot.sum(0)                      # (K,)
+            sums = onehot.T @ pv                              # (K,F)
+        else:
+            # fused jnp: same distance pass, scatter-add membership stats
+            # — the one-pass formulation the Pallas kernel implements on
+            # TPU, and the HLO-visible lowering calibrate.py rooflines
+            sums = jax.ops.segment_sum(pv, ids, num_segments=k)
+            batch_counts = jax.ops.segment_sum(
+                jnp.ones((points.shape[0],), jnp.float32), ids,
+                num_segments=k)
     new_counts = counts + batch_counts
     lr = jnp.where(batch_counts > 0, batch_counts /
                    jnp.maximum(new_counts, 1.0), 0.0)[:, None]
     means = sums / jnp.maximum(batch_counts, 1.0)[:, None]
     new_centroids = centroids * (1.0 - lr) + means * lr
+    return new_centroids, new_counts, ids, dmin
+
+
+def _update(centroids, counts, points, impl: str = "fused",
+            precision: str = "fp32"):
+    """Mini-batch k-means step (per-count learning rate).  Threads
+    ``impl``/``precision`` through to the fused step — historically this
+    re-ran ``_assign`` with the *default* impl, silently bypassing the
+    Pallas kernel for ``KMeans(impl='pallas')`` updates."""
+    new_centroids, new_counts, _, _ = _assign_update(
+        centroids, counts, points, impl=impl, precision=precision)
     return new_centroids, new_counts
 
 
@@ -64,7 +144,8 @@ class KMeans:
     n_clusters: int = 25
     n_features: int = 32
     seed: int = 0
-    impl: str = "jnp"               # jnp | pallas
+    impl: str = "fused"             # fused | pallas | jnp
+    precision: str = "fp32"         # fp32 | bf16 | int8
 
     def init(self, sample: Optional[np.ndarray] = None):
         if sample is not None and len(sample) >= self.n_clusters:
@@ -80,12 +161,23 @@ class KMeans:
 
     def assign(self, state, points) -> Tuple[jnp.ndarray, jnp.ndarray]:
         pts = jnp.asarray(points, jnp.float32)
-        return _assign(state["centroids"], pts, impl=self.impl)
+        return _assign(state["centroids"], pts, impl=self.impl,
+                       precision=self.precision)
 
     def update(self, state, points):
         pts = jnp.asarray(points, jnp.float32)
-        cent, counts = _update(state["centroids"], state["counts"], pts)
+        cent, counts = _update(state["centroids"], state["counts"], pts,
+                               impl=self.impl, precision=self.precision)
         return {"centroids": cent, "counts": counts}
+
+    def assign_update(self, state, points):
+        """One fused pass: (new_state, ids, dmin) — the streaming hot
+        path ``make_processor`` runs per message."""
+        pts = jnp.asarray(points, jnp.float32)
+        cent, counts, ids, dmin = _assign_update(
+            state["centroids"], state["counts"], pts,
+            impl=self.impl, precision=self.precision)
+        return {"centroids": cent, "counts": counts}, ids, dmin
 
     def outlier_scores(self, state, points) -> jnp.ndarray:
         _, d = self.assign(state, points)
@@ -98,7 +190,9 @@ class KMeans:
     def make_processor(self, param_service=None, model_name: str = "kmeans",
                        train: bool = True):
         """FaaS ``process_cloud`` handler: score + (optionally) update +
-        publish to the parameter service — the paper's model-update loop."""
+        publish to the parameter service — the paper's model-update loop.
+        Training messages take the *fused* path: one assign+update pass
+        yields the outlier scores and the centroid step together."""
         holder = {"state": None, "version": 0}
 
         def process_cloud(context, data=None):
@@ -117,15 +211,54 @@ class KMeans:
                 if newer is not None:
                     holder["version"] = newer[0]
                     holder["state"] = jax.tree.map(jnp.asarray, newer[1])
-            scores = self.outlier_scores(holder["state"], pts)
             if train:
-                holder["state"] = self.update(holder["state"], pts)
+                holder["state"], _, scores = self.assign_update(
+                    holder["state"], pts)
                 if param_service is not None:
                     holder["version"] = param_service.publish(
                         model_name, holder["state"])
+            else:
+                scores = self.outlier_scores(holder["state"], pts)
             s = np.asarray(scores)
             thresh = s.mean() + 3.0 * s.std()
             return {"n_outliers": int((s > thresh).sum()),
                     "mean_score": float(s.mean())}
 
         return process_cloud
+
+
+def assignment_agreement(precision: str, *, n_points: int = 2_500,
+                         n_features: int = 32, n_clusters: int = 25,
+                         seed: int = 0, n_warmup: int = 10) -> float:
+    """Fraction of points a reduced-precision variant assigns to the same
+    centroid as the fp32 reference, on a fixed MiniAppGenerator probe —
+    the accuracy column the placement advisor stamps on precision cells.
+
+    Measured after ``n_warmup`` streaming updates so the centroids are
+    near-converged (the steady state a long-running pipeline prices);
+    fresh-seeded centroids would put arbitrarily many points on Voronoi
+    boundaries and understate every variant.  Deterministic (fixed probe,
+    jnp simulation paths) and cached."""
+    key = (precision, n_points, n_features, n_clusters, seed, n_warmup)
+    hit = _AGREEMENT_CACHE.get(key)
+    if hit is not None:
+        return hit
+    from repro.ml.datagen import MiniAppGenerator
+    gen = MiniAppGenerator(n_points=n_points, n_features=n_features,
+                           n_clusters=n_clusters, seed=seed)
+    pts = gen.sample()
+    model = KMeans(n_clusters=n_clusters, n_features=n_features, seed=seed)
+    state = model.init(pts)
+    for _ in range(n_warmup):
+        state = model.update(state, gen.sample())
+    probe = jnp.asarray(pts, jnp.float32)
+    ref_ids, _ = _assign(state["centroids"], probe, impl="fused",
+                         precision="fp32")
+    ids, _ = _assign(state["centroids"], probe, impl="fused",
+                     precision=precision)
+    agree = float(jnp.mean((ids == ref_ids).astype(jnp.float32)))
+    _AGREEMENT_CACHE[key] = agree
+    return agree
+
+
+_AGREEMENT_CACHE: dict = {}

@@ -81,7 +81,7 @@ WAN_BANDS: Dict[str, Tuple[float, float]] = {
     for name, link in _WAN_LINKS.items()
 }
 
-PLACEMENTS = ("edge", "cloud", "hybrid", "fog")
+PLACEMENTS = ("edge", "cloud", "hybrid", "fog", "device")
 
 
 @dataclass(frozen=True)
@@ -102,6 +102,9 @@ class ModelSpec:
     hybrid_reduce: int = DEFAULT_HYBRID_REDUCE
     preprocess_flops_per_point: float = DEFAULT_PREPROCESS_FLOPS_PER_POINT
     sigma: float = 0.0              # lognormal service-noise (log-space)
+    # kernel precision variant (fp32 | bf16 | int8): model compute is
+    # priced at the executing tier's precision-scaled peak rate
+    precision: str = "fp32"
 
     def task_profile(self, n_points: int) -> TaskProfile:
         """The what-the-placement-engine-sees view of one message."""
@@ -110,7 +113,8 @@ class ModelSpec:
             input_bytes=float(message_nbytes(n_points)),
             input_tier="edge",
             output_bytes=float(self.output_bytes),
-            output_tier="cloud")
+            output_tier="cloud",
+            precision=self.precision)
 
 
 def model_specs(cost: Optional[CostModel] = None) -> Dict[str, ModelSpec]:
@@ -124,7 +128,8 @@ def model_specs(cost: Optional[CostModel] = None) -> Dict[str, ModelSpec]:
             output_bytes=mc.output_bytes,
             hybrid_reduce=mc.hybrid_reduce,
             preprocess_flops_per_point=mc.preprocess_flops_per_point,
-            sigma=mc.sigma)
+            sigma=mc.sigma,
+            precision=mc.precision)
         for name, mc in cost.costs.items()
     }
 
@@ -379,7 +384,7 @@ class Scenario:
     calibration, pair it with a matching spec
     (``model=model_specs(cost)[name]``), as the PlacementAdvisor does."""
     model: ModelSpec = KMEANS                 # calibrated k-means
-    placement: str = "cloud"                  # edge | cloud | hybrid | fog
+    placement: str = "cloud"          # edge | cloud | hybrid | fog | device
     wan_band: str = "100mbit"                 # key into WAN_BANDS
     n_messages: int = 64
     n_devices: int = 4                        # edge devices == partitions
@@ -503,7 +508,7 @@ def _edge_compute_s(sc: Scenario) -> float:
     m = sc.model
     if sc.placement == "edge":
         return sc.cost_model.compute_s(m.flops_per_point * sc.n_points,
-                                       "edge")
+                                       "edge", precision=m.precision)
     if sc.placement == "hybrid":
         return sc.cost_model.compute_s(
             m.preprocess_flops_per_point * sc.n_points, "edge")
@@ -517,15 +522,26 @@ def _fog_compute_s(sc: Scenario) -> float:
         sc.model.preprocess_flops_per_point * sc.n_points, "fog")
 
 
+def _device_compute_s(sc: Scenario) -> float:
+    """Per-message device-stage service time: the full model on the
+    sensing SoC, priced at the SoC's peak for the model's kernel
+    precision — the fp32-infeasible / int8-feasible split the precision
+    placement axis exists for."""
+    m = sc.model
+    return sc.cost_model.compute_s(m.flops_per_point * sc.n_points,
+                                   "device", precision=m.precision)
+
+
 def _cloud_compute_s(sc: Scenario) -> float:
     """Per-message cloud-stage service time (one consumer slot)."""
     m = sc.model
-    if sc.placement == "edge":
+    if sc.placement in ("edge", "device"):
         # results only need ingesting/merging on the cloud side
         return sc.cost_model.ingest_bytes_s(m.output_bytes, "cloud")
     points = sc.n_points if sc.placement == "cloud" \
         else max(sc.n_points // m.hybrid_reduce, 1)
-    return sc.cost_model.compute_s(m.flops_per_point * points, "cloud")
+    return sc.cost_model.compute_s(m.flops_per_point * points, "cloud",
+                                   precision=m.precision)
 
 
 def _reduced_payload(sc: Scenario) -> np.ndarray:
@@ -533,13 +549,19 @@ def _reduced_payload(sc: Scenario) -> np.ndarray:
                      N_FEATURES), np.float64)
 
 
+def _output_payload(sc: Scenario) -> np.ndarray:
+    return np.zeros(max(sc.model.output_bytes // 8, 1), np.float64)
+
+
 def _payload(sc: Scenario) -> np.ndarray:
     """What the *source* stage puts on its first broker hop (real numpy
     serialization, so byte accounting is exact): edge placement publishes
     only the model output, hybrid the edge-reduced message, cloud and fog
-    the raw points (fog reduces downstream, on the fog tier)."""
+    the raw points (fog reduces downstream, on the fog tier); device
+    placement's first hop is the on-device handoff of the raw points to
+    the SoC's model stage (the WAN only ever sees the model output)."""
     if sc.placement == "edge":
-        return np.zeros(max(sc.model.output_bytes // 8, 1), np.float64)
+        return _output_payload(sc)
     if sc.placement == "hybrid":
         return _reduced_payload(sc)
     return np.zeros((sc.n_points, N_FEATURES), np.float64)
@@ -552,6 +574,8 @@ def _service_model(sc: Scenario):
     stages = {"produce": produce_s, "process_cloud": _cloud_compute_s(sc)}
     if sc.placement == "fog":
         stages["process_fog"] = _fog_compute_s(sc)
+    if sc.placement == "device":
+        stages["process_device"] = _device_compute_s(sc)
     return sc.cost_model.service_model(
         stages, sigma=sc.effective_service_sigma, seed=sc.seed)
 
@@ -563,14 +587,27 @@ def _stage_flops(sc: Scenario, stage: str) -> float:
     m = sc.model
     if stage == "process_fog":
         return m.preprocess_flops_per_point * sc.n_points
+    if stage == "process_device":
+        return m.flops_per_point * sc.n_points
     if stage != "process_cloud":
         raise ValueError(f"no per-message FLOPs known for stage {stage!r}")
-    if sc.placement == "edge":
+    if sc.placement in ("edge", "device"):
         # only the published model output needs ingesting/merging
         return (m.output_bytes / 8.0) * INGEST_FLOPS_PER_VALUE
     points = sc.n_points if sc.placement == "cloud" \
         else max(sc.n_points // m.hybrid_reduce, 1)
     return m.flops_per_point * points
+
+
+def _stage_precision(sc: Scenario, stage: str) -> str:
+    """Kernel precision a stage's FLOPs run at: the model's calibrated
+    precision wherever the stage executes the model itself; fp32 for
+    pre-aggregation and output-ingest stages."""
+    if stage == "process_device":
+        return sc.model.precision
+    if stage == "process_cloud" and sc.placement not in ("edge", "device"):
+        return sc.model.precision
+    return "fp32"
 
 
 def _readvise_service_model(sc: Scenario, pipe):
@@ -591,7 +628,8 @@ def _readvise_service_model(sc: Scenario, pipe):
     tiered = sc.cost_model.tier_service_model(
         {name: _stage_flops(sc, name)},
         resolve=lambda stage: (pipe.stages[idx].pilot.tier, 1),
-        sigma=sc.effective_service_sigma, seed=sc.seed)
+        sigma=sc.effective_service_sigma, seed=sc.seed,
+        stage_precision={name: _stage_precision(sc, name)})
 
     def model(stage, ctx, payload):
         if stage == name:
@@ -639,13 +677,16 @@ def _wan_link(sc: Scenario):
 def placement_estimates(sc: Scenario) -> Dict[str, float]:
     """PlacementEngine per-tier completion-time estimates for one message
     of this scenario, priced over this scenario's WAN band — the full
-    tier set (edge, fog, cloud), so the analytic view ranks the same
-    candidates the DES sweeps."""
+    tier set (device, edge, fog, cloud), so the analytic view ranks the
+    same candidates the DES sweeps.  The device estimate runs at the
+    SoC's precision-scaled peak (``TaskProfile.precision``)."""
     wan = _wan_link(sc)
     links = {("edge", "cloud"): wan, ("edge", "hpc"): wan,
              ("fog", "cloud"): wan}
     eng = PlacementEngine(links=links, cost_model=sc.cost_model)
     mgr = PilotManager(devices=())
+    device = mgr.submit_pilot(ComputeResource(tier="device",
+                                              n_workers=sc.n_devices))
     edge = mgr.submit_pilot(ComputeResource(tier="edge",
                                             n_workers=sc.n_devices))
     fog = mgr.submit_pilot(ComputeResource(
@@ -654,7 +695,7 @@ def placement_estimates(sc: Scenario) -> Dict[str, float]:
     cloud = mgr.submit_pilot(ComputeResource(tier="cloud",
                                              n_workers=n_cons))
     return eng.compare_tiers(sc.model.task_profile(sc.n_points),
-                             [edge, fog, cloud])
+                             [device, edge, fog, cloud])
 
 
 def build_pipeline(sc: Scenario):
@@ -666,7 +707,10 @@ def build_pipeline(sc: Scenario):
     :class:`EdgeToCloudPipeline` wrapper; ``fog`` builds a genuine
     3-stage :class:`ContinuumPipeline` (edge → fog → cloud) whose first
     hop rides the edge→fog metro link and whose second hop rides the
-    scenario's WAN band."""
+    scenario's WAN band; ``device`` builds a 3-stage pipeline whose
+    first hop is the on-device handoff (raw points over the device
+    tier's intra link) into the SoC model stage, and whose second hop
+    ships only the model output over the WAN."""
     from repro.sim.clock import SimClock
     if sc.placement not in PLACEMENTS:
         raise ValueError(f"placement must be one of {PLACEMENTS}")
@@ -710,6 +754,30 @@ def build_pipeline(sc: Scenario):
             n_partitions=sc.n_devices, topic_name="e2c",
             shapers=[WanShaper(bandwidth_bps=metro.bandwidth_bps,
                                rtt_s=metro.latency_s, sleep=False),
+                     wan_shaper],
+            metrics=metrics, clock=clock,
+            placement_engine=engine,
+            speculative_factor=sc.speculative_factor,
+            heartbeat_timeout_s=heartbeat_s)
+    elif sc.placement == "device":
+        device = mgr.submit_pilot(ComputeResource(
+            tier="device", n_workers=sc.n_devices))
+        intra = sc.cost_model.profile.tier("device").intra_link
+        out_payload = _output_payload(sc)
+        pipe = ContinuumPipeline(
+            stages=[
+                StageSpec("produce", lambda ctx: payload,
+                          pilot=device, n_tasks=sc.n_devices),
+                StageSpec("process_device",
+                          lambda ctx, data=None: out_payload,
+                          pilot=device, n_tasks=sc.n_devices),
+                StageSpec("process_cloud",
+                          lambda ctx, data=None: None, pilot=cloud,
+                          n_tasks=n_cons),
+            ],
+            n_partitions=sc.n_devices, topic_name="e2c",
+            shapers=[WanShaper(bandwidth_bps=intra.bandwidth_bps,
+                               rtt_s=intra.latency_s, sleep=False),
                      wan_shaper],
             metrics=metrics, clock=clock,
             placement_engine=engine,
@@ -761,6 +829,8 @@ def build_pipeline(sc: Scenario):
         pilots = {"edge": edge, "cloud": cloud}
         if sc.placement == "fog":
             pilots["fog"] = fog
+        elif sc.placement == "device":
+            pilots["device"] = device
         targets = {}
         for tier in spec.targets:
             if tier not in pilots:

@@ -245,7 +245,11 @@ def test_advisor_three_stage_sweep_with_tier_vectors():
     assert fog_cells and all(c.tiers == ("edge", "fog", "cloud")
                              for c in fog_cells)
     assert all(len(c.tiers) >= 3 for c in fog_cells)
-    two_stage = [c for c in reports[0].cells if c.placement != "fog"]
+    device_cells = [c for c in reports[0].cells if c.placement == "device"]
+    assert device_cells and all(c.tiers == ("device", "device", "cloud")
+                                for c in device_cells)
+    two_stage = [c for c in reports[0].cells
+                 if c.placement not in ("fog", "device")]
     assert all(c.tiers == ("edge", "cloud") for c in two_stage)
     # the fog column shows up in the human table
     assert "e-f-c" in reports[0].table()

@@ -188,7 +188,7 @@ def test_fig3_goldens_repinned_on_calibrated_costs():
     autoencoder compute-bound."""
     k10 = run_scenario(Scenario(model=KMEANS, placement="cloud",
                                 wan_band="10mbit", n_messages=48))
-    assert k10.throughput_msgs_s == pytest.approx(1.9467631742, rel=1e-6)
+    assert k10.throughput_msgs_s == pytest.approx(1.9467832433, rel=1e-6)
     a10 = run_scenario(Scenario(model=AUTOENCODER, placement="cloud",
                                 wan_band="10mbit", n_messages=32))
     assert a10.throughput_msgs_s == pytest.approx(1.2298516731, rel=1e-6)
@@ -254,12 +254,13 @@ def test_advisor_bit_identical_across_three_runs():
     for r in rows[0]:
         by_band.setdefault(r["wan"], []).append(r)
     for band_rows in by_band.values():
-        assert [r["rank"] for r in band_rows] == [1, 2, 3, 4]
+        assert [r["rank"] for r in band_rows] == [1, 2, 3, 4, 5]
         assert sum(r["recommended"] for r in band_rows) == 1
     # every cell is tier-vector-stamped; the ≥3-stage fog sweep rides it
     tiers = {r["placement"]: r["tiers"] for r in rows[0]}
     assert tiers["fog"] == ["edge", "fog", "cloud"]
     assert tiers["cloud"] == ["edge", "cloud"]
+    assert tiers["device"] == ["device", "device", "cloud"]
 
 
 def test_pipeline_run_placement_advise():
@@ -280,8 +281,8 @@ def test_pipeline_run_placement_advise():
     assert rep.best("10mbit").placement in ("edge", "hybrid")
     assert "recommended" in rep.table()
     # rows/table keep ascending-bandwidth band order, not lexicographic
-    # (4 placements per band: edge/cloud/hybrid/fog)
-    assert [r["wan"] for r in rep.rows()[::4]] == \
+    # (5 placements per band: edge/cloud/hybrid/fog/device)
+    assert [r["wan"] for r in rep.rows()[::5]] == \
         ["10mbit", "50mbit", "100mbit"]
     with pytest.raises(ValueError):
         pipe.run(n_messages=4, placement="bogus")
@@ -347,7 +348,7 @@ def test_advisor_multi_objective_columns_and_latency_budget():
     assert not cloud.feasible
     assert rep.ranking("10mbit")[-1] is cloud
     # budget filtering never *drops* cells: full grid still reported
-    assert len(rep.ranking("10mbit")) == 4
+    assert len(rep.ranking("10mbit")) == 5
 
 
 def test_advisor_infeasible_budget_is_ranked_but_flagged():
@@ -362,7 +363,7 @@ def test_advisor_infeasible_budget_is_ranked_but_flagged():
     assert best.placement == "edge"           # still the right direction
     assert not best.feasible                  # …but honestly flagged
     rows = rep.rows()
-    assert len(rows) == 12
+    assert len(rows) == 15
     assert all(r["feasible"] is False for r in rows)
     assert sum(r["recommended"] for r in rows) == 3   # one per band
     assert "[over budget]" in rep.table()
@@ -648,3 +649,66 @@ def test_threaded_and_sim_speculation_agree_on_who_wins():
         assert launches > 0                    # stragglers actually raced
         assert wins + losses + cancelled == launches
         assert losses > wins                   # the shared direction
+
+
+# ---------------------------------------------------------------------------
+# the precision placement axis (tentpole): quantized variants as models
+# ---------------------------------------------------------------------------
+
+def test_calibration_carries_precision_variants():
+    """The committed calibration registers the reduced-precision kmeans
+    variants as first-class models with their precision stamped."""
+    cal = load_calibration()
+    assert {"kmeans", "kmeans_bf16", "kmeans_int8"} <= set(cal)
+    assert cal["kmeans"].precision == "fp32"
+    assert cal["kmeans_bf16"].precision == "bf16"
+    assert cal["kmeans_int8"].precision == "int8"
+    # precision survives the ModelSpec resolution the advisor rides
+    specs = model_specs()
+    assert specs["kmeans_int8"].precision == "int8"
+    assert specs["kmeans_int8"].task_profile(2500).precision == "int8"
+    # variants share the fp32 kernel's transfer profile (same output)
+    assert cal["kmeans_int8"].output_bytes == cal["kmeans"].output_bytes
+
+
+def test_device_tier_prices_precision_speedups():
+    """The device SoC is an FPU-less MCU with a micro-NPU: int8 runs two
+    orders of magnitude denser than software fp32, and the cost model
+    prices compute_s accordingly."""
+    from repro.cost.profiles import DEVICE_SOC
+    assert DEVICE_SOC.speedup("fp32") == 1.0
+    assert DEVICE_SOC.speedup("int8") == 100.0
+    with pytest.raises(ValueError, match="precision"):
+        DEVICE_SOC.speedup("fp64")
+    cm = CostModel()
+    f = 1e9
+    assert cm.compute_s(f, "device", 1, "int8") == pytest.approx(
+        cm.compute_s(f, "device", 1, "fp32") / 100.0)
+    # cloud/edge accelerators keep the generic 2x/4x datapath multipliers
+    assert cm.tier_flops("cloud", 1, "bf16") == \
+        pytest.approx(2.0 * cm.tier_flops("cloud"))
+
+
+def test_advisor_precision_split_on_device_tier():
+    """Acceptance pin: under a 2 s p95 budget at 10 Mbit/s the fp32
+    k-means is infeasible on the device tier (software floats on the
+    MCU) while the int8 variant is feasible and ranked — with the
+    accuracy column stamped on every cell."""
+    adv = PlacementAdvisor(n_messages=32)
+    fp32 = adv.advise("kmeans", bands=("10mbit",), latency_budget=2.0)
+    int8 = adv.advise("kmeans_int8", bands=("10mbit",), latency_budget=2.0)
+    dev_fp32 = next(c for c in fp32.cells if c.placement == "device")
+    dev_int8 = next(c for c in int8.cells if c.placement == "device")
+    assert not dev_fp32.feasible and dev_fp32.latency_p95_s > 2.0
+    assert dev_int8.feasible and dev_int8.latency_p95_s <= 2.0
+    # the accuracy-vs-latency trade-off columns
+    assert dev_fp32.precision == "fp32"
+    assert dev_fp32.agreement_vs_fp32 == 1.0
+    assert dev_int8.precision == "int8"
+    assert 0.99 <= dev_int8.agreement_vs_fp32 < 1.0
+    # the feasible int8 device cell is genuinely ranked, not flagged last
+    ranked = int8.ranking("10mbit")
+    assert ranked.index(dev_int8) < len(ranked) - 1
+    rows = int8.rows()
+    assert all(r["precision"] == "int8" for r in rows)
+    assert all(0.99 <= r["agreement_vs_fp32"] < 1.0 for r in rows)

@@ -114,3 +114,46 @@ def test_processors_share_via_param_service():
     out = proc_b(Ctx(), data=gen.sample())
     assert "n_outliers" in out
     assert ps.version("m") == 1     # train=False published nothing
+
+
+def test_kmeans_update_threads_impl_to_fused_kernel(monkeypatch):
+    """Satellite bugfix regression: KMeans(impl='pallas').update() must
+    reach the fused Pallas kernel — historically _update re-ran _assign
+    with the *default* impl, silently bypassing it."""
+    import repro.kernels.ops as kops
+    from repro.ml import kmeans as mlk
+    calls = []
+    real = kops.kmeans_assign_update
+
+    def counting(*a, **kw):
+        calls.append(1)
+        return real(*a, **kw)
+
+    monkeypatch.setattr(kops, "kmeans_assign_update", counting)
+    jax.clear_caches()                 # force a retrace through the spy
+    gen = MiniAppGenerator(n_points=300, seed=5)
+    pts = gen.sample()
+    km = KMeans(n_clusters=10, impl="pallas")
+    st = km.init(pts)
+    st = km.update(st, pts)
+    assert calls, "update() never reached the fused Pallas kernel"
+    assert st["counts"].sum() == 300
+
+
+@pytest.mark.parametrize("precision", ["bf16", "int8"])
+def test_kmeans_precision_variant_still_converges(precision):
+    """Reduced-precision streaming k-means still drives inertia down to
+    fp32-comparable clustering quality (individual centroids may settle
+    in different basins after a boundary flip — quality, not bitwise
+    trajectory, is the contract)."""
+    gen = MiniAppGenerator(n_points=1000, seed=6)
+    pts = gen.sample()
+    km = KMeans(n_clusters=25, precision=precision)
+    ref = KMeans(n_clusters=25)
+    st, st_ref = km.init(pts), ref.init(pts)
+    inert0 = km.inertia(st, pts)
+    for _ in range(5):
+        st = km.update(st, pts)
+        st_ref = ref.update(st_ref, pts)
+    assert km.inertia(st, pts) < inert0
+    assert km.inertia(st, pts) < 1.25 * ref.inertia(st_ref, pts)
